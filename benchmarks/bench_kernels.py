@@ -1,0 +1,39 @@
+"""Kernel micro-benches: wall time of the jnp reference path on CPU (the
+Pallas kernels target TPU; interpret mode is a correctness harness, so the
+derived column reports ref-path throughput + kernel/ref agreement)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.kernels import flash_attention as fa, linkload as ll, ref
+
+
+def bench_kernels(fast=True):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    B, S, H, K, hd = 2, 512, 8, 2, 64
+    q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, K, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, K, hd), jnp.float32)
+    f = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v))
+    f(q, k, v).block_until_ready()
+    _, us = timed(lambda: f(q, k, v).block_until_ready(), repeat=5)
+    flops = 4 * B * H * S * S * hd / 2
+    o1 = fa.flash_attention(q, k, v, block_q=128, block_k=128, interpret=True)
+    err = float(jnp.max(jnp.abs(o1 - f(q, k, v))))
+    emit("kernel_flash_attention_ref", us,
+         f"{flops/us/1e3:.1f}GFLOPs_kernel_maxerr_{err:.1e}")
+
+    n, L = 8192, 512
+    lid = jax.random.randint(ks[0], (n, 6), -1, L).astype(jnp.int32)
+    rates = jax.random.uniform(ks[1], (n,)) * 1e9
+    queue = jnp.zeros((L,))
+    cap = jnp.full((L,), 1e11)
+    g = jax.jit(lambda: ref.linkload_ref(lid, rates, L, 400e3, 1600e3, 0.2, queue, cap, 1e-5))
+    g()[0].block_until_ready()
+    _, us = timed(lambda: g()[0].block_until_ready(), repeat=10)
+    l1, _, _ = ll.linkload(lid, rates, queue, cap, n_links=L, interpret=True)
+    err = float(jnp.max(jnp.abs(l1 - g()[0])))
+    emit("kernel_linkload_ref", us, f"{n*6/us:.0f}Mupdates/s_kernel_maxerr_{err:.1e}")

@@ -1,0 +1,40 @@
+"""Shared benchmark helpers: timing + CSV emission + sim runners."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def timed(fn, *args, repeat: int = 1, **kw):
+    t0 = time.time()
+    out = None
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    dt = (time.time() - t0) / repeat
+    return out, dt * 1e6
+
+
+def run_sim(topo, trace, scheme: str, duration_s: float, **cfg_kw):
+    from repro.netsim import engine, metrics
+
+    cfg = engine.SimConfig(scheme=scheme, duration_s=duration_s, **cfg_kw)
+    t0 = time.time()
+    st, outs = engine.simulate(topo, cfg, trace)
+    st.finish.block_until_ready()
+    wall_us = (time.time() - t0) * 1e6
+    return st, outs, wall_us
+
+
+def fct(st, trace, topo, host_bw):
+    from repro.netsim import metrics
+
+    return metrics.fct_stats(st, trace, topo, host_bw)

@@ -1,0 +1,240 @@
+"""One benchmark per paper table/figure (DESIGN.md §7 index).
+
+Each function prints ``name,us_per_call,derived`` CSV rows.  ``fast=True``
+(default) runs reduced durations/scales that preserve the paper's trends;
+``--full`` in run.py uses the paper-scale parameters.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, fct, run_sim, timed
+
+
+# ------------------------------------------------------------- Table I
+def bench_table1_gbn(fast=True):
+    import jax.numpy as jnp
+    from repro.core import gbn
+
+    sizes = jnp.array([64e3, 1e6], jnp.float32)
+    (ratios, us) = timed(lambda: np.asarray(gbn.table1_inflation(sizes)), repeat=10)
+    emit("table1_gbn_64KB_avg_inflation", us, f"{ratios[0]:.2f}x_paper_5.77x")
+    emit("table1_gbn_1MB_avg_inflation", us, f"{ratios[1]:.2f}x_paper_3.01x")
+    emit("table1_min_threefold", us, f"min_inflation_{ratios.min():.2f}_paper_claims_>=3x")
+
+
+# ------------------------------------------------------------- Fig. 1
+def bench_fig1_flowlet(fast=True):
+    """Flowlet sizes under inactivity thresholds: TCP (bursty, ack-clocked)
+    vs RDMA (continuous line-rate).  Packet-trace synthesis + gap scan."""
+    rng = np.random.default_rng(0)
+    mtu = 1500.0
+    line = 40e9
+
+    def flowlet_sizes(inter_arrival_s, thresh):
+        gaps = inter_arrival_s > thresh
+        sizes, cur = [], 0.0
+        for g in gaps:
+            cur += mtu
+            if g:
+                sizes.append(cur)
+                cur = 0.0
+        if cur:
+            sizes.append(cur)
+        return np.array(sizes)
+
+    n = 40000 if fast else 400000
+    # TCP: cwnd-sized bursts every RTT (100us), ack-clocked spacing inside
+    rtt = 100e-6
+    cwnd = 64
+    intra = mtu * 8 / line
+    tcp_ia = np.tile(np.r_[np.full(cwnd - 1, intra), rtt - (cwnd - 1) * intra], n // cwnd)
+    # RDMA: continuous line-rate stream with tiny jitter
+    rdma_ia = np.full(n, intra) * rng.uniform(0.9, 1.1, n)
+
+    def med(ia, th):
+        s = flowlet_sizes(ia, th)
+        return float(np.median(s)) if len(s) else float(ia.size * mtu)
+
+    for th_us in (10, 100, 500):
+        th = th_us * 1e-6
+        (m_tcp, us) = timed(med, tcp_ia, th)
+        m_rdma = med(rdma_ia, th)
+        emit(f"fig1_flowlet_tcp_{th_us}us", us, f"median_{m_tcp/1e3:.1f}KB")
+        emit(f"fig1_flowlet_rdma_{th_us}us", us,
+             f"median_{m_rdma/1e6:.1f}MB_ratio_{m_rdma/max(m_tcp,1):.0f}x")
+
+
+# ---------------------------------------------------------- Fig. 6 / 7
+def bench_fig6_fig7_nsweep(fast=True):
+    from repro.netsim import metrics, topology, workloads
+
+    topo = topology.leaf_spine(4, 8, 8, 100e9)
+    dur = 5e-3 if fast else 20e-3
+    trace = workloads.poisson_trace(workloads.TraceConfig(
+        workload="fixed:10e6", load=0.6, duration_s=dur, n_hosts=topo.n_hosts,
+        host_bw=100e9, seed=3, hosts_per_leaf=topo.hosts_per_leaf,
+        load_base_bw=4 * 8 * 100e9,
+    ))
+    base = None
+    for n in (1, 2, 4, 6):
+        st, outs, us = run_sim(topo, trace, "seqbalance", dur * 4, n_sub=n)
+        s = fct(st, trace, topo, 100e9)
+        imb = float(np.median(metrics.throughput_imbalance(outs)))
+        if n == 2:
+            base = s["avg_slowdown"]
+        rel = "" if base is None else f"_vs_N2_{(1 - s['avg_slowdown']/base)*100:+.1f}%"
+        emit(f"fig6_fct_N{n}", us,
+             f"avg_slow_{s['avg_slowdown']:.3f}_p99_{s['p99_slowdown']:.2f}{rel}")
+        emit(f"fig7_imbalance_N{n}", us, f"median_imbalance_{imb:.3f}")
+
+
+# ---------------------------------------------------------- Fig. 10/11
+def _pairs_trace(n_qp=4, size=1e12, starts=(0.0, 5e-3, 10e-3)):
+    from repro.netsim import workloads
+
+    pairs, st = [], []
+    for i, t0 in enumerate(starts):
+        for _ in range(n_qp):
+            pairs.append((i, 3 + i))
+            st.append(t0)
+    return workloads.permanent_senders_trace(pairs, st, size / n_qp)
+
+
+def _dc40():
+    from repro.netsim.dcqcn import DCQCNParams
+
+    return DCQCNParams(kmin_bytes=160e3, kmax_bytes=520e3, r_ai=400e6, min_rate=400e6)
+
+
+def bench_fig10_symmetric(fast=True):
+    from repro.netsim import topology
+
+    topo = topology.testbed_symmetric()
+    for scheme in ("ecmp", "seqbalance"):
+        st, outs, us = run_sim(topo, _pairs_trace(), scheme, 15e-3, dcqcn=_dc40())
+        up = np.asarray(outs.uplink_load)[:, 0, :]
+        late = up[1000:].mean(0) / 1e9
+        tot = late.sum()
+        spread = late.max() - late.min()
+        emit(f"fig10_sym_{scheme}", us,
+             f"total_{tot:.1f}Gbps_perpath_{'/'.join(f'{v:.0f}' for v in late)}_spread_{spread:.1f}")
+
+
+def bench_fig11_asymmetric(fast=True):
+    from repro.netsim import topology
+
+    topo = topology.testbed_asymmetric()
+    res = {}
+    for scheme in ("ecmp", "seqbalance"):
+        st, outs, us = run_sim(topo, _pairs_trace(), scheme, 15e-3, dcqcn=_dc40())
+        up = np.asarray(outs.uplink_load)[:, 0, :]
+        late = up[1000:].mean(0) / 1e9
+        res[scheme] = late
+        emit(f"fig11_asym_{scheme}", us,
+             f"total_{late.sum():.1f}Gbps_fatpath_{late[2]:.1f}Gbps")
+    fat_gain = res["seqbalance"][2] / max(res["ecmp"][2], 1e-9)
+    emit("fig11_asym_fatpath_gain", 0.0, f"seqbalance_uses_80G_path_{fat_gain:.2f}x_of_ecmp")
+
+
+# ------------------------------------------------------------- Table II
+def bench_table2_overhead(fast=True):
+    from repro.netsim import metrics, topology, workloads
+
+    topo = topology.testbed_symmetric()
+    for nsend, label in ((1, 25), (2, 50), (3, 75)):
+        pairs = [(i, 3 + i) for i in range(nsend) for _ in range(4)]
+        trace = workloads.permanent_senders_trace(pairs, [0.0] * len(pairs), 2.5e8)
+        st, outs, us = run_sim(topo, trace, "seqbalance", 10e-3, dcqcn=_dc40())
+        bw = metrics.congestion_packet_bandwidth(st, 10e-3)
+        data_bw = np.asarray(outs.goodput_total).mean()
+        emit(f"table2_load{label}", us,
+             f"cong_pkt_{bw/1e3:.2f}Kbps_data_{data_bw/1e9:.1f}Gbps_paper_0/4Kbps/0.05Gbps")
+
+
+# ---------------------------------------------------- Fig. 12/13 (2-tier)
+def _poisson(topo, wl, load, dur, seed=1):
+    from repro.netsim import workloads
+
+    fabric = topo.n_leaf * topo.n_paths * 100e9
+    return workloads.poisson_trace(workloads.TraceConfig(
+        workload=wl, load=load, duration_s=dur, n_hosts=topo.n_hosts,
+        host_bw=100e9, seed=seed, hosts_per_leaf=topo.hosts_per_leaf,
+        load_base_bw=fabric,
+    ))
+
+
+def bench_fig12_fct_2tier(fast=True):
+    from repro.netsim import topology
+
+    topo = topology.sim_2tier()
+    loads = (0.5, 0.8) if fast else (0.3, 0.4, 0.5, 0.6, 0.7, 0.8)
+    arr = 2.5e-3 if fast else 10e-3
+    for wl in ("alistorage", "websearch"):
+        for load in loads:
+            trace = _poisson(topo, wl, load, arr)
+            base = {}
+            for scheme in ("ecmp", "seqbalance", "letflow", "conga", "drill"):
+                st, outs, us = run_sim(topo, trace, scheme, arr * 4)
+                s = fct(st, trace, topo, 100e9)
+                base[scheme] = s
+                emit(f"fig12_{wl}_{int(load*100)}_{scheme}", us,
+                     f"avg_slow_{s['avg_slowdown']:.2f}_p99_{s['p99_slowdown']:.1f}_comp_{s['completion_rate']:.3f}")
+            g = (1 - base["seqbalance"]["p99_slowdown"] / base["ecmp"]["p99_slowdown"]) * 100
+            emit(f"fig12_{wl}_{int(load*100)}_gain", 0.0, f"seq_vs_ecmp_p99_{g:+.1f}%")
+
+
+def bench_fig13_imbalance(fast=True):
+    from repro.netsim import metrics, topology
+
+    topo = topology.sim_2tier()
+    arr = 2e-3 if fast else 10e-3
+    for wl in ("alistorage", "websearch"):
+        trace = _poisson(topo, wl, 0.8, arr)
+        for scheme in ("ecmp", "seqbalance", "conga", "drill"):
+            st, outs, us = run_sim(topo, trace, scheme, arr * 2)
+            imb = metrics.throughput_imbalance(outs)
+            med = float(np.median(imb)) if len(imb) else -1
+            p90 = float(np.percentile(imb, 90)) if len(imb) else -1
+            emit(f"fig13_{wl}_{scheme}", us, f"imb_median_{med:.3f}_p90_{p90:.3f}")
+
+
+# ------------------------------------------------------- Fig. 14 (3-tier)
+def bench_fig14_fct_3tier(fast=True):
+    from repro.netsim import topology, workloads
+
+    if fast:
+        topo = topology.three_tier(n_tor=4, n_agg=4, n_core=2, hosts_per_tor=3,
+                                   bw_tor_agg=400e9, bw_agg_core=100e9)
+    else:
+        topo = topology.three_tier()  # paper scale: 20/20/16, 320 hosts
+    arr = 1.5e-3 if fast else 8e-3
+    fabric = topo.n_leaf * 4 * 100e9
+    for wl in ("alistorage", "websearch"):
+        trace = workloads.poisson_trace(workloads.TraceConfig(
+            workload=wl, load=0.6, duration_s=arr, n_hosts=topo.n_hosts,
+            host_bw=100e9, seed=2, hosts_per_leaf=topo.hosts_per_leaf,
+            load_base_bw=fabric,
+        ))
+        base = {}
+        for scheme in ("ecmp", "letflow", "seqbalance"):
+            st, outs, us = run_sim(topo, trace, scheme, arr * 4)
+            s = fct(st, trace, topo, 100e9)
+            base[scheme] = s
+            emit(f"fig14_{wl}_{scheme}", us,
+                 f"avg_slow_{s['avg_slowdown']:.2f}_p99_{s['p99_slowdown']:.1f}")
+        g = (1 - base["seqbalance"]["p99_slowdown"] / base["ecmp"]["p99_slowdown"]) * 100
+        emit(f"fig14_{wl}_gain", 0.0, f"seq_vs_ecmp_p99_{g:+.1f}%")
+
+
+ALL = [
+    bench_table1_gbn,
+    bench_fig1_flowlet,
+    bench_fig6_fig7_nsweep,
+    bench_fig10_symmetric,
+    bench_fig11_asymmetric,
+    bench_table2_overhead,
+    bench_fig12_fct_2tier,
+    bench_fig13_imbalance,
+    bench_fig14_fct_3tier,
+]

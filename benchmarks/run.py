@@ -1,0 +1,39 @@
+"""Benchmark harness: one function per paper table/figure + §Perf benches.
+
+Prints ``name,us_per_call,derived`` CSV (DESIGN.md §7 maps names to paper
+artifacts).  ``--full`` switches to paper-scale simulation parameters;
+``--only <substr>`` filters benches.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale runs")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import paper_benches
+    from benchmarks.bench_collectives import bench_collectives
+    from benchmarks.bench_kernels import bench_kernels
+
+    benches = list(paper_benches.ALL) + [bench_collectives, bench_kernels]
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for b in benches:
+        if args.only and args.only not in b.__name__:
+            continue
+        try:
+            b(fast=not args.full)
+        except Exception as e:  # a failed bench must not hide the others
+            print(f"{b.__name__},0.0,ERROR_{type(e).__name__}:_{str(e)[:120]}",
+                  file=sys.stdout, flush=True)
+    print(f"# total_wall_s,{time.time()-t0:.1f},", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Simulate the paper's large-scale setup (8 leaves x 12 spines x 128
+hosts @100G) and compare SeqBalance against ECMP/LetFlow/CONGA/DRILL.
+
+Run: PYTHONPATH=src python examples/simulate_datacenter.py [--elephants]
+"""
+import argparse
+
+import numpy as np
+
+from repro.netsim import engine, metrics, topology, workloads
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--elephants", action="store_true",
+                help="AI-training traffic mode (few large flows)")
+ap.add_argument("--load", type=float, default=0.6)
+args = ap.parse_args()
+
+topo = topology.sim_2tier()
+wl = "fixed:10e6" if args.elephants else "websearch"
+trace = workloads.poisson_trace(workloads.TraceConfig(
+    workload=wl, load=args.load, duration_s=4e-3, n_hosts=topo.n_hosts,
+    host_bw=100e9, seed=1, hosts_per_leaf=topo.hosts_per_leaf,
+    load_base_bw=8 * 12 * 100e9,
+))
+print(f"workload={wl} load={args.load} flows={int(trace.valid.sum())}")
+
+for scheme in ("ecmp", "letflow", "conga", "drill", "seqbalance"):
+    cfg = engine.SimConfig(scheme=scheme, duration_s=16e-3)
+    st, outs = engine.simulate(topo, cfg, trace)
+    s = metrics.fct_stats(st, trace, topo, 100e9)
+    imb = metrics.throughput_imbalance(outs)
+    print(f"{scheme:11s} avg_slowdown={s['avg_slowdown']:7.2f} "
+          f"p99={s['p99_slowdown']:8.2f} completion={s['completion_rate']:.3f} "
+          f"imbalance_median={np.median(imb) if len(imb) else -1:.3f}")

@@ -1,0 +1,4 @@
+"""repro — SeqBalance (RoCE load balancing) in JAX, plus the multi-pod
+training/serving framework that embeds it as a first-class grad-sync and
+collective-scheduling feature.  See DESIGN.md for the system inventory."""
+__version__ = "0.1.0"

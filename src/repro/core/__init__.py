@@ -1,0 +1,12 @@
+"""SeqBalance core: the paper's contribution as composable JAX modules.
+
+  hashing          five-tuple hashing + double-hash probe sequences
+  shaper           WQE -> N sub-WQEs, per-sub-flow QPs, bitmap CQE
+  congestion_table phi-expiring inactive-path table (source ToR)
+  routing          first-packet path selection with congested-path rehash
+  baselines        ECMP / LetFlow / CONGA / DRILL policies
+  gbn              go-back-N retransmission cost model
+"""
+from repro.core import baselines, congestion_table, gbn, hashing, routing, shaper
+
+__all__ = ["baselines", "congestion_table", "gbn", "hashing", "routing", "shaper"]

@@ -1,0 +1,75 @@
+"""Baseline load-balancing policies the paper compares against (§IV.B).
+
+Each policy is a pure function mapping (flow state, link state, rng) ->
+path choice, consumed by the netsim engine.  The *fluid-model* renderings
+of the packet-level schemes are documented inline and in DESIGN.md §8.
+
+  ECMP    — per-flow five-tuple hash, static (the deployed default).
+  LetFlow — flowlet switching: when an inter-packet gap exceeds the flowlet
+            timeout, the next burst re-draws a RANDOM path.  In fluid form a
+            gap occurs iff the flow's packet interval MTU/rate exceeds the
+            timeout — which for RDMA's continuous high-rate traffic almost
+            never happens (paper Fig. 1: RDMA flowlets are GB-sized).
+  CONGA   — flowlet switching, but the new path is the argmin of a
+            congestion metric (leaf-to-leaf, fed back in-band).  Same
+            flowlet-starvation problem under RDMA.
+  DRILL   — per-packet micro load balancing on local queue depths
+            (power-of-two-choices).  Fluid form: each step a flow's traffic
+            re-splits toward the shortest local queues; near-perfect
+            balance, but the per-packet spray reorders packets and RDMA's
+            go-back-N turns that into retransmission storms (core/gbn.py
+            supplies the goodput penalty).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hashing
+
+
+def flowlet_gap_occurs(rate_bps: jax.Array, mtu_bytes: float, timeout_s: float) -> jax.Array:
+    """Fluid flowlet criterion: the inter-packet gap of a flow sending at
+    ``rate`` is MTU/rate; a flowlet boundary appears iff that gap exceeds
+    the inactivity timeout.  (rate<=0 counts as a boundary.)"""
+    rate = jnp.maximum(rate_bps, 1e-9)
+    gap = (mtu_bytes * 8.0) / rate
+    return (gap > timeout_s) | (rate_bps <= 0.0)
+
+
+def letflow_paths(
+    cur_paths: jax.Array, gap: jax.Array, rng_u32: jax.Array, n_paths: int
+) -> jax.Array:
+    """LetFlow: keep the current path unless a flowlet gap occurred, in which
+    case pick uniformly at random (rng_u32: independent uint32 per flow)."""
+    rand_path = (rng_u32 % jnp.uint32(n_paths)).astype(jnp.int32)
+    return jnp.where(gap, rand_path, cur_paths)
+
+
+def conga_paths(
+    cur_paths: jax.Array, gap: jax.Array, path_congestion: jax.Array
+) -> jax.Array:
+    """CONGA: on a flowlet boundary move to the least-congested path.
+
+    path_congestion: f32[..., n_paths] — per-flow view of end-to-end path
+    congestion (max of per-hop utilization, as CONGA's DRE measures)."""
+    best = jnp.argmin(path_congestion, axis=-1).astype(jnp.int32)
+    return jnp.where(gap, best, cur_paths)
+
+
+def drill_weights(queue_bytes: jax.Array, q0: float = 1500.0) -> jax.Array:
+    """DRILL fluid split: fraction of a flow's packets sent to each path
+    this step.  DRILL sends every packet to the shortest of (2 random + the
+    last-best) local queues; in expectation traffic concentrates on short
+    queues, which we render as inverse-queue-proportional weights.
+
+    queue_bytes: f32[..., n_paths] -> weights summing to 1 along last axis.
+    """
+    inv = 1.0 / (queue_bytes + q0)
+    return inv / jnp.sum(inv, axis=-1, keepdims=True)
+
+
+def wcmp_weights(capacity_bps: jax.Array) -> jax.Array:
+    """Capacity-proportional static weights (used for ideal/asymmetric
+    baselines and sanity checks)."""
+    return capacity_bps / jnp.sum(capacity_bps, axis=-1, keepdims=True)

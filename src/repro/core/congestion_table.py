@@ -1,0 +1,85 @@
+"""Congestion Table at the source ToR switch (paper §III.A/§III.B/§III.D).
+
+The destination ToR mirrors any ECN-marked data packet back to the source
+ToR as a *Congestion Packet* whose 10-bit BTH PathTag names the congested
+path.  On receipt, the source ToR marks that path *inactive* for a duration
+phi; further Congestion Packets for the same path REFRESH the timer.  A path
+sheds its inactive status only after phi elapses with no new Congestion
+Packet.  Inactive paths reject NEW sub-flows (they keep carrying already
+-placed sub-flows — rerouting mid-flow would reorder packets).
+
+Representation: ``inactive_until[tor, path]`` — absolute simulation time
+until which the path is closed to new sub-flows.  Refresh == scatter-max of
+(now + phi), which is exactly the paper's restart-the-timer semantics and is
+a single vectorized op per step.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CongestionTable(NamedTuple):
+    inactive_until: jax.Array  # f32[n_tors, n_paths] absolute time
+
+    @classmethod
+    def create(cls, n_tors: int, n_paths: int) -> "CongestionTable":
+        return cls(inactive_until=jnp.full((n_tors, n_paths), -jnp.inf, jnp.float32))
+
+
+def mark_congested(
+    table: CongestionTable,
+    tor_ids: jax.Array,
+    path_ids: jax.Array,
+    now: jax.Array | float,
+    phi: float,
+    valid: jax.Array | None = None,
+) -> CongestionTable:
+    """Process a batch of Congestion Packets.
+
+    tor_ids/path_ids: int32[k] (the source ToR that receives the packet and
+    the PathTag it carries).  ``valid`` masks out padding entries.  Refresh
+    semantics = scatter-max of (now + phi).
+    """
+    expiry = jnp.asarray(now, jnp.float32) + jnp.float32(phi)
+    expiry = jnp.broadcast_to(expiry, jnp.shape(tor_ids))
+    if valid is not None:
+        expiry = jnp.where(valid, expiry, -jnp.inf)
+    new = table.inactive_until.at[tor_ids, path_ids].max(expiry, mode="drop")
+    return table._replace(inactive_until=new)
+
+
+def mark_congested_dense(
+    table: CongestionTable, congested_now: jax.Array, now: jax.Array | float, phi: float
+) -> CongestionTable:
+    """Dense variant: congested_now is bool[n_tors, n_paths] — which (tor,
+    path) pairs received a Congestion Packet during this step.  This is the
+    netsim fast path (no gather/scatter)."""
+    expiry = jnp.where(congested_now, jnp.asarray(now, jnp.float32) + jnp.float32(phi), -jnp.inf)
+    return table._replace(inactive_until=jnp.maximum(table.inactive_until, expiry))
+
+
+def is_inactive(
+    table: CongestionTable, tor_ids: jax.Array, path_ids: jax.Array, now: jax.Array | float
+) -> jax.Array:
+    """Is (tor, path) currently closed to new sub-flows?"""
+    return jnp.asarray(now, jnp.float32) < table.inactive_until[tor_ids, path_ids]
+
+
+def inactive_row(table: CongestionTable, tor_id: jax.Array, now: jax.Array | float) -> jax.Array:
+    """bool[n_paths] inactive mask for one source ToR."""
+    return jnp.asarray(now, jnp.float32) < table.inactive_until[tor_id]
+
+
+def inactive_matrix(table: CongestionTable, now: jax.Array | float) -> jax.Array:
+    """bool[n_tors, n_paths] — full inactive view at time ``now``."""
+    return jnp.asarray(now, jnp.float32) < table.inactive_until
+
+
+def occupancy(table: CongestionTable, now: jax.Array | float) -> jax.Array:
+    """Number of currently-inactive paths per ToR (switch-memory footprint —
+    the paper argues this stays tiny; we expose it so tests/benches can
+    check)."""
+    return inactive_matrix(table, now).sum(axis=-1)

@@ -1,0 +1,113 @@
+"""SeqBalance Shaper (paper §III.C) — WQE segmentation + bitmap CQE (§III.D).
+
+The Shaper lives in the RDMA driver: it splits one application WQE (a large
+message) into N sub-WQEs of (near-)equal size, posts each on its OWN queue
+pair (so each sub-flow has an independent PSN space and can safely take a
+different network path), and raises a single CQE to the application only
+after the ACKs of ALL sub-WQEs have arrived, tracked with a bitmap.
+
+Everything here is a pure function over arrays so the netsim engine and the
+dist-layer grad-sync engine can reuse the identical logic.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hashing
+
+MAX_SUBFLOWS = 32  # bitmap is uint32; the paper operates at N<=6
+
+
+def split_wqe(size: jax.Array, n: int) -> jax.Array:
+    """Split message sizes into n near-equal sub-WQE sizes.
+
+    size: [...] integer/float byte counts.  Returns [..., n] with
+    sum == size and max-min <= 1 (for integer sizes).  The paper splits into
+    "N sub-flows of equal size"; with arbitrary byte counts the remainder
+    bytes go to the first (size % n) sub-WQEs.
+    """
+    size = jnp.asarray(size)
+    if size.dtype.kind in "iu":
+        base = size[..., None] // n
+        rem = size[..., None] % n
+        bump = (jnp.arange(n) < rem).astype(size.dtype)
+        return base + bump
+    # float sizes (fluid model): exact equal split
+    return jnp.broadcast_to(size[..., None] / n, size.shape + (n,))
+
+
+def subflow_five_tuples(
+    src: jax.Array, dst: jax.Array, flow_id: jax.Array, n: int, base_qpn: int = 0x1000
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Five-tuples for the n sub-flows of each WQE.
+
+    Each sub-WQE is posted on its own QP; in RoCEv2 the UDP source port is
+    derived from the QPN, so sub-flows hash differently at the ToR.  Returns
+    (src, dst, sport, dport) each of shape [..., n].
+    """
+    sub = jnp.arange(n, dtype=jnp.uint32)
+    qpn = (jnp.asarray(flow_id, jnp.uint32)[..., None] * jnp.uint32(n)
+           + sub + jnp.uint32(base_qpn))
+    sport = jnp.uint32(0xC000) + (hashing.fmix32(qpn) % jnp.uint32(0x3FFF))
+    dport = jnp.broadcast_to(jnp.uint32(4791), sport.shape)  # RoCEv2 UDP port
+    srcb = jnp.broadcast_to(jnp.asarray(src, jnp.uint32)[..., None], sport.shape)
+    dstb = jnp.broadcast_to(jnp.asarray(dst, jnp.uint32)[..., None], sport.shape)
+    return srcb, dstb, sport, dport
+
+
+class CQEState(NamedTuple):
+    """Sender-side completion tracking (paper Fig. 5).
+
+    bitmap: uint32[...]  bit i set  <=>  ACK of sub-WQE i received.
+    n_sub:  int32[...]   how many sub-WQEs the WQE was split into.
+    """
+
+    bitmap: jax.Array
+    n_sub: jax.Array
+
+    @classmethod
+    def create(cls, n_wqes: int, n_sub: int | jax.Array) -> "CQEState":
+        return cls(
+            bitmap=jnp.zeros((n_wqes,), jnp.uint32),
+            n_sub=jnp.broadcast_to(jnp.asarray(n_sub, jnp.int32), (n_wqes,)),
+        )
+
+
+def ack_subwqe(state: CQEState, wqe_idx: jax.Array, sub_idx: jax.Array) -> CQEState:
+    """Record ACK arrival for (wqe, sub) pairs. Idempotent (bitwise OR)."""
+    bit = jnp.uint32(1) << jnp.asarray(sub_idx, jnp.uint32)
+    new_bitmap = state.bitmap.at[wqe_idx].set(state.bitmap[wqe_idx] | bit)
+    return state._replace(bitmap=new_bitmap)
+
+
+def ack_mask(state: CQEState, acked: jax.Array) -> CQEState:
+    """Vectorized ACK: ``acked`` is bool[..., n] per-sub-flow arrivals this
+    step; ORs the corresponding bits in one shot (netsim fast path)."""
+    n = acked.shape[-1]
+    bits = (acked.astype(jnp.uint32) << jnp.arange(n, dtype=jnp.uint32)).sum(
+        axis=-1, dtype=jnp.uint32
+    )
+    return state._replace(bitmap=state.bitmap | bits)
+
+
+def cqe_ready(state: CQEState) -> jax.Array:
+    """True where every sub-WQE has been ACKed -> the driver may raise the
+    application-visible CQE (the app never sees the segmentation)."""
+    full = jnp.where(
+        state.n_sub >= 32,
+        jnp.uint32(0xFFFFFFFF),
+        (jnp.uint32(1) << state.n_sub.astype(jnp.uint32)) - jnp.uint32(1),
+    )
+    return (state.bitmap & full) == full
+
+
+def popcount32(x: jax.Array) -> jax.Array:
+    """Number of ACKs received (bit population count, uint32)."""
+    x = x.astype(jnp.uint32)
+    x = x - ((x >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return ((x * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)

@@ -1,0 +1,108 @@
+"""Pallas TPU kernel for the switch dataplane step (netsim hot-spot).
+
+Computes per-link offered load from (sub-flow -> link) incidence plus the
+queue update and RED/ECN mark probabilities — the per-step work of every
+ToR/spine in the fluid simulator.
+
+TPU adaptation: the scatter-add over link ids is reformulated as a
+ONE-HOT MATMUL so it runs on the MXU instead of serial scatter ports:
+sub-flows stream through the grid in ``block_n`` tiles; for each tile the
+kernel builds onehot[block_n, n_links] via broadcasted_iota comparison and
+accumulates ``rates @ onehot`` into a VMEM-resident load vector.  Queue
+and mark updates fuse into the final grid step (revisiting HBM zero
+times).  n_links is padded to lanes (128).
+
+Oracle: kernels/ref.py::linkload_ref (segment_sum formulation).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _linkload_kernel(
+    lid_ref, rate_ref, queue_ref, cap_ref, load_ref, newq_ref, mark_ref,
+    *, n_links_padded, hops, kmin, kmax, pmax, dt,
+):
+    ti = pl.program_id(0)
+    n_tiles = pl.num_programs(0)
+
+    @pl.when(ti == 0)
+    def _init():
+        load_ref[...] = jnp.zeros_like(load_ref)
+
+    lids = lid_ref[...]  # [block_n, hops] i32 (-1 = none)
+    rates = rate_ref[...]  # [block_n]
+    contrib = jnp.broadcast_to(rates[:, None], lids.shape).reshape(-1)  # [bn*hops]
+    flat = lids.reshape(-1)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (flat.shape[0], n_links_padded), 1)
+    onehot = (iota == flat[:, None]).astype(jnp.float32)  # MXU-friendly
+    load_ref[...] += contrib @ onehot  # [n_links_padded]
+
+    @pl.when(ti == n_tiles - 1)
+    def _finalize():
+        load = load_ref[...]
+        q = queue_ref[...]
+        cap = cap_ref[...]
+        newq = jnp.clip(q + (load - cap) * dt / 8.0, 0.0, 8e6)
+        ramp = (newq - kmin) / (kmax - kmin)
+        mark = jnp.where(newq < kmin, 0.0, jnp.where(newq > kmax, 1.0, ramp * pmax))
+        newq_ref[...] = newq
+        mark_ref[...] = mark
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_links", "kmin", "kmax", "pmax", "dt", "block_n", "interpret")
+)
+def linkload(
+    link_ids: jax.Array,  # i32[n, hops]
+    rates: jax.Array,  # f32[n]
+    queue: jax.Array,  # f32[n_links]
+    capacity: jax.Array,  # f32[n_links]
+    *,
+    n_links: int,
+    kmin: float = 400e3,
+    kmax: float = 1600e3,
+    pmax: float = 0.2,
+    dt: float = 10e-6,
+    block_n: int = 512,
+    interpret: bool = False,
+):
+    n, hops = link_ids.shape
+    pad_n = (-n) % block_n
+    if pad_n:
+        link_ids = jnp.pad(link_ids, ((0, pad_n), (0, 0)), constant_values=-1)
+        rates = jnp.pad(rates, (0, pad_n))
+    L_pad = ((n_links + 127) // 128) * 128
+    queue_p = jnp.pad(queue, (0, L_pad - n_links))
+    cap_p = jnp.pad(capacity[:n_links], (0, L_pad - n_links), constant_values=1e30)
+
+    grid = ((n + pad_n) // block_n,)
+    load, newq, mark = pl.pallas_call(
+        functools.partial(
+            _linkload_kernel,
+            n_links_padded=L_pad, hops=hops, kmin=kmin, kmax=kmax, pmax=pmax, dt=dt,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, hops), lambda t: (t, 0)),
+            pl.BlockSpec((block_n,), lambda t: (t,)),
+            pl.BlockSpec((L_pad,), lambda t: (0,)),
+            pl.BlockSpec((L_pad,), lambda t: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((L_pad,), lambda t: (0,)),
+            pl.BlockSpec((L_pad,), lambda t: (0,)),
+            pl.BlockSpec((L_pad,), lambda t: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((L_pad,), jnp.float32),
+            jax.ShapeDtypeStruct((L_pad,), jnp.float32),
+            jax.ShapeDtypeStruct((L_pad,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(link_ids, rates, queue_p, cap_p)
+    return load[:n_links], newq[:n_links], mark[:n_links]

@@ -1,0 +1,28 @@
+"""Jit'd kernel entry points: Pallas on TPU, interpret-mode elsewhere."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import flash_attention as _fa, linkload as _ll
+from repro.kernels import ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                    block_q=128, block_k=128):
+    return _fa.flash_attention(
+        q, k, v, causal=causal, window=window, softcap=softcap,
+        block_q=block_q, block_k=block_k, interpret=not _on_tpu(),
+    )
+
+
+def linkload(link_ids, rates, queue, capacity, **kw):
+    return _ll.linkload(link_ids, rates, queue, capacity,
+                        interpret=not _on_tpu(), **kw)
+
+
+flash_attention_ref = ref.flash_attention_ref
+linkload_ref = ref.linkload_ref

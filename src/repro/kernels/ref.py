@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(
+    q: jax.Array,  # [B, S, H, hd]
+    k: jax.Array,  # [B, S, K, hd]
+    v: jax.Array,  # [B, S, K, hd]
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+) -> jax.Array:
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    qg = q.reshape(B, S, K, G, hd).astype(jnp.float32)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, k.astype(jnp.float32)) * (hd**-0.5)
+    if softcap:
+        scores = softcap * jnp.tanh(scores / softcap)
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= j <= i
+    if window:
+        mask &= (i - j) < window
+    scores = jnp.where(mask, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w, v.astype(jnp.float32))
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def linkload_ref(
+    link_ids: jax.Array,  # i32[n, hops]  (-1 = no link)
+    rates: jax.Array,  # f32[n]
+    n_links: int,
+    kmin: float,
+    kmax: float,
+    pmax: float,
+    queue: jax.Array,  # f32[n_links] current queue bytes
+    capacity: jax.Array,  # f32[n_links]
+    dt: float,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """(load, new_queue, mark_prob) — the ToR/spine dataplane step."""
+    hops = link_ids.shape[1]
+    contrib = jnp.broadcast_to(rates[:, None], link_ids.shape).reshape(-1)
+    lid = jnp.where(link_ids >= 0, link_ids, n_links).reshape(-1)
+    load = jax.ops.segment_sum(contrib, lid, num_segments=n_links + 1)[:n_links]
+    new_queue = jnp.clip(queue + (load - capacity) * dt / 8.0, 0.0, 8e6)
+    ramp = (new_queue - kmin) / (kmax - kmin)
+    mark = jnp.where(new_queue < kmin, 0.0, jnp.where(new_queue > kmax, 1.0, ramp * pmax))
+    return load, new_queue, mark.astype(jnp.float32)

@@ -1,0 +1,214 @@
+"""GQA attention with RoPE, optional qk-norm / softcap / sliding window,
+full-sequence (train/prefill) and single-step (decode) paths.
+
+The inner product kernel is the jnp reference by default; on TPU the Pallas
+flash kernel (repro.kernels.flash_attention) can be enabled via
+``use_pallas`` (validated against the same reference in tests).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+
+class AttnParams(NamedTuple):
+    ln: jax.Array  # [D]
+    wq: jax.Array  # [D, H, hd]
+    wk: jax.Array  # [D, K, hd]
+    wv: jax.Array  # [D, K, hd]
+    wo: jax.Array  # [H, hd, D]
+    q_norm: jax.Array  # [hd] (qwen3 qk_norm; ones if unused)
+    k_norm: jax.Array  # [hd]
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # [B, S_cache, K, hd]
+    v: jax.Array  # [B, S_cache, K, hd]
+    pos: jax.Array  # i32[] next write position (== #valid entries)
+
+
+def init(key, cfg) -> AttnParams:
+    D, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = common.split_keys(key, 4)
+    return AttnParams(
+        ln=jnp.zeros((D,), jnp.float32),
+        wq=common.dense_init(ks[0], (D, H, hd), D),
+        wk=common.dense_init(ks[1], (D, K, hd), D),
+        wv=common.dense_init(ks[2], (D, K, hd), D),
+        wo=common.dense_init(ks[3], (H, hd, D), H * hd),
+        q_norm=jnp.zeros((hd,), jnp.float32),
+        k_norm=jnp.zeros((hd,), jnp.float32),
+    )
+
+
+def _qkv(p: AttnParams, x, positions, cfg):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p.wq.astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p.wk.astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p.wv.astype(dt))
+    if cfg.qk_norm:
+        q = common.rms_norm(q, p.q_norm)
+        k = common.rms_norm(k, p.k_norm)
+    q = common.rope(q, positions, cfg.rope_theta)
+    k = common.rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, cfg):
+    """q: [B,Sq,H,hd]; k/v: [B,Skv,K,hd]; mask: [B or 1, Sq, Skv] bool."""
+    B, Sq, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    q = q.reshape(B, Sq, K, G, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", q, k).astype(jnp.float32)
+    scores = scores * (hd**-0.5)
+    scores = common.softcap(scores, cfg.attn_softcap)
+    scores = jnp.where(mask[:, None, None, :, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w, v)
+    return out.reshape(B, Sq, H, hd)
+
+
+def causal_mask(Sq: int, window: int = 0) -> jax.Array:
+    i = jnp.arange(Sq)[:, None]
+    j = jnp.arange(Sq)[None, :]
+    m = j <= i
+    if window:
+        m &= (i - j) < window
+    return m[None]  # [1, Sq, Sq]
+
+
+def full_mask(Sq: int, Skv: int) -> jax.Array:
+    return jnp.ones((1, Sq, Skv), bool)
+
+
+Q_CHUNK = 1024  # q-chunked attention above this sequence length
+
+
+def _sdpa_chunked(q, k, v, cfg, window: int):
+    """Causal attention, scanned over query chunks so the [Sq, Skv] score
+    tensor never materializes (32k x 32k would be petabytes at batch) —
+    the pure-JAX analogue of the flash kernel's outer loop."""
+    B, S, H, hd = q.shape
+    C = min(getattr(cfg, "q_chunk", Q_CHUNK) or Q_CHUNK, S)
+    assert S % C == 0, (S, C)
+    nch = S // C
+    qs = q.reshape(B, nch, C, H, hd).swapaxes(0, 1)  # [nch, B, C, H, hd]
+    j = jnp.arange(S)
+
+    def chunk(carry, inp):
+        ci, qc = inp
+        i = ci * C + jnp.arange(C)
+        m = j[None, :] <= i[:, None]
+        if window:
+            m &= (i[:, None] - j[None, :]) < window
+        out = _sdpa(qc, k, v, m[None], cfg)
+        return carry, out
+
+    _, outs = jax.lax.scan(chunk, None, (jnp.arange(nch), qs))
+    return outs.swapaxes(0, 1).reshape(B, S, H, hd)
+
+
+def apply_full(
+    p: AttnParams, x, cfg, *, window: int = 0, is_causal: bool = True,
+    kv_override=None,
+):
+    """Train/encoder path over the full sequence.  ``kv_override`` supplies
+    cross-attention keys/values from an encoder (x only provides queries;
+    no RoPE across modalities)."""
+    B, S, D = x.shape
+    positions = jnp.arange(S)[None, :]
+    h = common.rms_norm(x, p.ln)
+    if kv_override is None:
+        q, k, v = _qkv(p, h, positions, cfg)
+        if is_causal and S > Q_CHUNK:
+            out = _sdpa_chunked(q, k, v, cfg, window)
+        else:
+            mask = causal_mask(S, window) if is_causal else full_mask(S, S)
+            out = _sdpa(q, k, v, mask, cfg)
+    else:
+        dt = h.dtype
+        q = jnp.einsum("bsd,dhk->bshk", h, p.wq.astype(dt))
+        if cfg.qk_norm:
+            q = common.rms_norm(q, p.q_norm)
+        k, v = kv_override
+        out = _sdpa(q, k.astype(q.dtype), v.astype(q.dtype), full_mask(S, k.shape[1]), cfg)
+    return x + jnp.einsum("bqhk,hkd->bqd", out, p.wo.astype(x.dtype))
+
+
+def encode_kv(p: AttnParams, enc_out, cfg):
+    """Cross-attention K/V from encoder output (whisper decoder)."""
+    dt = enc_out.dtype
+    h = enc_out  # already normed by encoder final norm
+    k = jnp.einsum("bsd,dhk->bshk", h, p.wk.astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", h, p.wv.astype(dt))
+    if cfg.qk_norm:
+        k = common.rms_norm(k, p.k_norm)
+    return k, v
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype) -> KVCache:
+    K, hd = cfg.n_kv_heads, cfg.hd
+    return KVCache(
+        k=jnp.zeros((batch, max_len, K, hd), dtype),
+        v=jnp.zeros((batch, max_len, K, hd), dtype),
+        pos=jnp.zeros((), jnp.int32),
+    )
+
+
+def apply_prefill(p: AttnParams, x, cfg, cache: KVCache, *, window: int = 0):
+    """Full-sequence forward that also fills the KV cache.  Windowed caches
+    are ring buffers (slot = abs_position mod cache_len), so only the last
+    ``cache_len`` positions are retained — half the memory of a full cache
+    for local-attention layers."""
+    B, S, D = x.shape
+    positions = jnp.arange(S)[None, :]
+    h = common.rms_norm(x, p.ln)
+    q, k, v = _qkv(p, h, positions, cfg)
+    if S > Q_CHUNK:
+        out = _sdpa_chunked(q, k, v, cfg, window)
+    else:
+        out = _sdpa(q, k, v, causal_mask(S, window), cfg)
+    y = x + jnp.einsum("bqhk,hkd->bqd", out, p.wo.astype(x.dtype))
+    Sc = cache.k.shape[1]
+    if S >= Sc:  # keep last Sc entries, ring-aligned
+        ks = jnp.roll(k[:, -Sc:], S % Sc, axis=1)
+        vs = jnp.roll(v[:, -Sc:], S % Sc, axis=1)
+        new_cache = KVCache(
+            k=ks.astype(cache.k.dtype), v=vs.astype(cache.v.dtype),
+            pos=jnp.asarray(S, jnp.int32),
+        )
+    else:
+        new_cache = KVCache(
+            k=jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype), (0, 0, 0, 0)),
+            v=jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype), (0, 0, 0, 0)),
+            pos=jnp.asarray(S, jnp.int32),
+        )
+    return y, new_cache
+
+
+def apply_decode(p: AttnParams, x, cfg, cache: KVCache, *, window: int = 0):
+    """One-token step. x: [B, 1, D]; attends to cache + self.  The cache is
+    a ring buffer when shorter than the absolute position horizon."""
+    B, _, D = x.shape
+    pos = cache.pos
+    positions = pos[None, None]  # [1,1]
+    h = common.rms_norm(x, p.ln)
+    q, k, v = _qkv(p, h, jnp.broadcast_to(positions, (B, 1)), cfg)
+    Sc = cache.k.shape[1]
+    slot = pos % Sc
+    kc = jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype), (0, slot, 0, 0))
+    vc = jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype), (0, slot, 0, 0))
+    j = jnp.arange(Sc)[None, None, :]  # [1,1,Sc]
+    age = (slot - j) % Sc  # steps since slot j was written (0 = current)
+    abs_pos = pos - age
+    mask = abs_pos >= 0
+    if window:
+        mask &= age < window
+    out = _sdpa(q, kc.astype(q.dtype), vc.astype(q.dtype), mask, cfg)
+    y = x + jnp.einsum("bqhk,hkd->bqd", out, p.wo.astype(x.dtype))
+    return y, KVCache(k=kc, v=vc, pos=pos + 1)

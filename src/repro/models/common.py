@@ -1,0 +1,56 @@
+"""Shared model substrate: norms, RoPE, activations, init helpers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """Rotary embedding. x: [..., S, H, hd]; positions: [..., S]."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # [..., S, half]
+    cos = jnp.cos(ang)[..., None, :]  # [..., S, 1, half]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def act_fn(kind: str):
+    if kind == "gated_silu" or kind == "silu":
+        return jax.nn.silu
+    if kind == "gated_gelu" or kind == "gelu":
+        return lambda x: jax.nn.gelu(x, approximate=True)
+    if kind == "squared_relu":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(kind)
+
+
+def dense_init(key, shape, in_axis_size=None, dtype=jnp.float32):
+    """Truncated-normal fan-in init (LeCun-ish), fp32 master weights."""
+    fan_in = in_axis_size if in_axis_size is not None else shape[0]
+    std = (1.0 / max(fan_in, 1)) ** 0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def split_keys(key, n):
+    return list(jax.random.split(key, n))
+
+
+def cast(params, dtype):
+    return jax.tree.map(lambda p: p.astype(dtype), params)

@@ -1,0 +1,41 @@
+"""Dense MLP channel mixers: gated (SiLU/GELU) and squared-ReLU variants."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+
+class MLPParams(NamedTuple):
+    ln: jax.Array  # [D]
+    wi: jax.Array  # [D, F]   (up / sole projection)
+    wg: jax.Array  # [D, F]   (gate; zeros-shaped [D,0] when ungated)
+    wo: jax.Array  # [F, D]
+
+
+def init(key, cfg, d_ff: int | None = None) -> MLPParams:
+    D = cfg.d_model
+    F = cfg.d_ff if d_ff is None else d_ff
+    gated = cfg.mlp_kind.startswith("gated")
+    ks = common.split_keys(key, 3)
+    return MLPParams(
+        ln=jnp.zeros((D,), jnp.float32),
+        wi=common.dense_init(ks[0], (D, F), D),
+        wg=common.dense_init(ks[1], (D, F if gated else 0), D),
+        wo=common.dense_init(ks[2], (F, D), F),
+    )
+
+
+def apply(p: MLPParams, x: jax.Array, cfg) -> jax.Array:
+    dt = x.dtype
+    h = common.rms_norm(x, p.ln)
+    act = common.act_fn(cfg.mlp_kind)
+    up = jnp.einsum("bsd,df->bsf", h, p.wi.astype(dt))
+    if p.wg.shape[-1]:
+        up = act(jnp.einsum("bsd,df->bsf", h, p.wg.astype(dt))) * up
+    else:
+        up = act(up)
+    return x + jnp.einsum("bsf,fd->bsd", up, p.wo.astype(dt))

@@ -1,0 +1,139 @@
+"""Public model API: init / loss / prefill / decode for every assigned arch.
+
+Params are a plain dict pytree; config is static.  The same functions serve
+all ten architectures — the per-arch structure lives in
+``transformer.block_program``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common, transformer
+from repro.models.transformer import Unit
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    ks = common.split_keys(key, 6)
+    prelude, sb, n_super, trailing = transformer.block_program(cfg)
+    params = {
+        "embed": common.dense_init(ks[0], (cfg.vocab, cfg.d_model), cfg.d_model),
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+        "prelude": tuple(transformer.unit_init(k, cfg, u)
+                         for k, u in zip(common.split_keys(ks[1], max(len(prelude), 1)), prelude)),
+        "main": transformer.init_stack(ks[2], cfg, sb, n_super),
+        "trailing": tuple(transformer.unit_init(k, cfg, u)
+                          for k, u in zip(common.split_keys(ks[3], max(len(trailing), 1)), trailing)),
+    }
+    if cfg.is_encoder_decoder:
+        eu, en = transformer.encoder_program(cfg)
+        params["encoder"] = transformer.init_stack(ks[4], cfg, eu, en)
+        params["enc_norm"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = common.dense_init(ks[5], (cfg.d_model, cfg.vocab), cfg.d_model)
+    return params
+
+
+# ------------------------------------------------------------------ inputs
+def embed_tokens(params, cfg, tokens):
+    x = params["embed"][tokens].astype(_dtype(cfg))
+    return x * jnp.asarray(cfg.d_model**0.5, _dtype(cfg))
+
+
+def _encoder_forward(params, cfg, frames):
+    """Whisper-style encoder over stub frame embeddings [B, F, D]."""
+    eu, en = transformer.encoder_program(cfg)
+    x = frames.astype(_dtype(cfg))
+    x, _, _ = transformer.apply_stack(params["encoder"], x, cfg, eu, en, "train")
+    return common.rms_norm(x, params["enc_norm"])
+
+
+def _decoder_input(params, cfg, batch):
+    """Token embeddings, with modality stubs spliced in, plus ctx."""
+    x = embed_tokens(params, cfg, batch["tokens"])
+    ctx = {}
+    if cfg.n_vision_tokens:  # VLM stub: patch embeddings replace the prefix
+        vis = batch["vision_embeds"].astype(x.dtype)
+        nv = cfg.n_vision_tokens
+        x = jnp.concatenate([vis[:, :nv], x[:, nv:]], axis=1)
+    if cfg.is_encoder_decoder:
+        ctx["enc_out"] = _encoder_forward(params, cfg, batch["frames"])
+    return x, ctx
+
+
+def _run_decoder(params, cfg, x, mode, cache=None, ctx=None):
+    prelude, sb, n_super, trailing = transformer.block_program(cfg)
+    c_pre = cache["prelude"] if cache is not None else None
+    c_main = cache["main"] if cache is not None else None
+    c_trail = cache["trailing"] if cache is not None else None
+    x, nc_pre, a0 = transformer.apply_units_unstacked(
+        params["prelude"], x, cfg, prelude, mode, c_pre, ctx)
+    x, nc_main, a1 = transformer.apply_stack(
+        params["main"], x, cfg, sb, n_super, mode, c_main, ctx)
+    x, nc_trail, a2 = transformer.apply_units_unstacked(
+        params["trailing"], x, cfg, trailing, mode, c_trail, ctx)
+    new_cache = {"prelude": nc_pre, "main": nc_main, "trailing": nc_trail}
+    return x, new_cache, a0 + a1 + a2
+
+
+def logits_fn(params, cfg, x):
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
+    return common.softcap(logits, cfg.logit_softcap)
+
+
+# ------------------------------------------------------------------ train
+def forward_train(params, cfg, batch):
+    x, ctx = _decoder_input(params, cfg, batch)
+    x, _, aux = _run_decoder(params, cfg, x, "train", ctx=ctx)
+    x = common.rms_norm(x, params["final_norm"])
+    return logits_fn(params, cfg, x), aux
+
+
+def loss_fn(params, cfg, batch):
+    logits, aux = forward_train(params, cfg, batch)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    lab = jnp.maximum(labels, 0)
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+    nll = (lse - gold) * mask
+    ntok = jnp.maximum(mask.sum(), 1.0)
+    loss = nll.sum() / ntok + aux
+    return loss, {"nll": nll.sum() / ntok, "aux": aux, "ntok": ntok}
+
+
+# ------------------------------------------------------------------ serve
+def init_cache(params, cfg, batch_size: int, max_len: int):
+    prelude, sb, n_super, trailing = transformer.block_program(cfg)
+    dt = _dtype(cfg)
+    return {
+        "prelude": tuple(transformer.unit_cache_init(cfg, u, batch_size, max_len, dt)
+                         for u in prelude),
+        "main": transformer.stack_cache_init(cfg, sb, n_super, batch_size, max_len, dt),
+        "trailing": tuple(transformer.unit_cache_init(cfg, u, batch_size, max_len, dt)
+                          for u in trailing),
+    }
+
+
+def prefill(params, cfg, batch, max_len: int):
+    """Process the prompt; returns (last-position logits [B, V], cache)."""
+    x, ctx = _decoder_input(params, cfg, batch)
+    cache = init_cache(params, cfg, x.shape[0], max_len)
+    x, cache, _ = _run_decoder(params, cfg, x, "prefill", cache=cache, ctx=ctx)
+    x = common.rms_norm(x[:, -1:], params["final_norm"])
+    return logits_fn(params, cfg, x)[:, 0], cache
+
+
+def decode_step(params, cfg, tokens, cache):
+    """One decode step.  tokens: [B, 1] -> (logits [B, V], new cache)."""
+    x = embed_tokens(params, cfg, tokens)
+    x, cache, _ = _run_decoder(params, cfg, x, "decode", cache=cache)
+    x = common.rms_norm(x, params["final_norm"])
+    return logits_fn(params, cfg, x)[:, 0], cache

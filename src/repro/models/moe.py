@@ -1,0 +1,118 @@
+"""Fine-grained Mixture-of-Experts channel mixer (DeepSeekMoE / Granite-MoE).
+
+Top-k routing with shared (always-on) experts.  Dispatch is the sort-based
+fixed-shape algorithm: token replicas are bucketed per expert up to a
+capacity C (overflow dropped, as in standard capacity-factor MoE), expert
+FFNs run as one batched einsum over [E, C, D] — MXU-friendly, no dynamic
+shapes, and the expert axis shards on "model" (expert parallelism); XLA
+inserts the all-to-all at the dispatch/combine boundaries.
+
+Aux losses: load-balance (Switch-style) + router z-loss, returned so the
+train loop can add them.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+
+class MoEParams(NamedTuple):
+    ln: jax.Array  # [D]
+    router: jax.Array  # [D, E]
+    we_i: jax.Array  # [E, D, Fe]
+    we_g: jax.Array  # [E, D, Fe]
+    we_o: jax.Array  # [E, Fe, D]
+    ws_i: jax.Array  # [D, Fs]  shared experts (Fs = n_shared * d_expert)
+    ws_g: jax.Array  # [D, Fs]
+    ws_o: jax.Array  # [Fs, D]
+
+
+def init(key, cfg) -> MoEParams:
+    D = cfg.d_model
+    m = cfg.moe
+    E, Fe = m.n_experts, m.d_expert
+    Fs = m.n_shared * m.d_expert
+    ks = common.split_keys(key, 7)
+    return MoEParams(
+        ln=jnp.zeros((D,), jnp.float32),
+        router=common.dense_init(ks[0], (D, E), D),
+        we_i=common.dense_init(ks[1], (E, D, Fe), D),
+        we_g=common.dense_init(ks[2], (E, D, Fe), D),
+        we_o=common.dense_init(ks[3], (E, Fe, D), Fe),
+        ws_i=common.dense_init(ks[4], (D, Fs), D),
+        ws_g=common.dense_init(ks[5], (D, Fs), D),
+        ws_o=common.dense_init(ks[6], (Fs, D), Fs),
+    )
+
+
+def _capacity(T: int, E: int, k: int, cf: float) -> int:
+    c = int(T * k * cf / E) + 1
+    return max(8, min(c, T))
+
+
+def apply(p: MoEParams, x: jax.Array, cfg) -> tuple[jax.Array, dict]:
+    m = cfg.moe
+    B, S, D = x.shape
+    E, k = m.n_experts, m.top_k
+    dt = x.dtype
+    h = common.rms_norm(x, p.ln)
+    flat = h.reshape(-1, D)  # [T, D]
+    T = flat.shape[0]
+    C = _capacity(T, E, k, m.capacity_factor)
+
+    logits = jnp.einsum("td,de->te", flat.astype(jnp.float32), p.router.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)  # [T, k]
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # ---- fixed-shape sort-based dispatch -------------------------------
+    e_flat = gate_idx.reshape(-1)  # [T*k]
+    t_flat = jnp.repeat(jnp.arange(T), k)  # token id per replica
+    w_flat = gate_vals.reshape(-1)
+    order = jnp.argsort(e_flat)  # group replicas by expert
+    e_sorted = e_flat[order]
+    # position within the expert's group
+    grp_start = jnp.searchsorted(e_sorted, jnp.arange(E))
+    pos_in_grp = jnp.arange(T * k) - grp_start[e_sorted]
+    keep = pos_in_grp < C
+    slot = e_sorted * C + pos_in_grp  # [T*k] target slot (expert-major)
+    slot = jnp.where(keep, slot, E * C)  # overflow -> dropped sentinel
+
+    tok_of_slot = jnp.full((E * C + 1,), T, jnp.int32)  # sentinel token T
+    tok_of_slot = tok_of_slot.at[slot].set(t_flat[order].astype(jnp.int32), mode="drop")
+    w_of_slot = jnp.zeros((E * C + 1,), jnp.float32)
+    w_of_slot = w_of_slot.at[slot].set(w_flat[order], mode="drop")
+
+    flat_pad = jnp.concatenate([flat, jnp.zeros((1, D), dt)], axis=0)
+    xe = flat_pad[tok_of_slot[: E * C]].reshape(E, C, D)  # [E, C, D]
+
+    # ---- expert FFNs (expert-parallel einsums) -------------------------
+    up = jnp.einsum("ecd,edf->ecf", xe, p.we_i.astype(dt))
+    gate = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p.we_g.astype(dt)))
+    ye = jnp.einsum("ecf,efd->ecd", gate * up, p.we_o.astype(dt))  # [E, C, D]
+
+    # ---- combine back --------------------------------------------------
+    ye_flat = ye.reshape(E * C, D) * w_of_slot[: E * C, None].astype(dt)
+    out = jnp.zeros((T + 1, D), dt).at[tok_of_slot[: E * C]].add(ye_flat, mode="drop")
+    out = out[:T]
+
+    # ---- shared experts (dense) ----------------------------------------
+    if p.ws_i.shape[-1]:
+        su = jnp.einsum("td,df->tf", flat, p.ws_i.astype(dt))
+        sg = jax.nn.silu(jnp.einsum("td,df->tf", flat, p.ws_g.astype(dt)))
+        out = out + jnp.einsum("tf,fd->td", sg * su, p.ws_o.astype(dt))
+
+    # ---- aux losses ------------------------------------------------------
+    # Switch load-balance: E * sum_e (frac_tokens_e * mean_prob_e)
+    assign1 = jax.nn.one_hot(gate_idx[:, 0], E, dtype=jnp.float32)
+    frac = assign1.mean(0)
+    mean_prob = probs.mean(0)
+    aux = dict(
+        lb_loss=m.aux_loss * E * jnp.sum(frac * mean_prob),
+        z_loss=m.router_z_loss * jnp.mean(jax.nn.logsumexp(logits, -1) ** 2),
+    )
+    return x + out.reshape(B, S, D), aux

@@ -1,0 +1,343 @@
+"""Recurrent sequence mixers: mLSTM + sLSTM (xLSTM) and RG-LRU (Griffin /
+RecurrentGemma).  TPU-adapted forms:
+
+  mLSTM — matrix-memory cell with exponential gating.  The recurrence is
+    linear in the state, so we run it CHUNKWISE-PARALLEL: within a chunk
+    (256 tokens) everything is dense matmuls against a decay matrix (MXU
+    work), across chunks a short lax.scan carries (C, n).  This is the
+    TPU-native rethinking of the CUDA kernel in the paper — VMEM-sized
+    chunks, MXU-shaped contractions — not a port of its per-timestep loop.
+  sLSTM — scalar cell with hidden-state feedback through the gates; the
+    recurrence is NOT associative, so it scans over time (documented
+    bottleneck; xLSTM places sLSTM in 1-of-8 blocks for this reason).
+  RG-LRU — diagonal linear recurrence with input-dependent gates; runs as
+    a jax.lax.associative_scan (log-depth on TPU).
+
+Decode paths update O(1)-size states — these archs are the ones that run
+the ``long_500k`` cell (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+MLSTM_CHUNK = 256
+
+
+# ----------------------------------------------------------------- conv1d
+def causal_conv1d(x: jax.Array, w: jax.Array, prev: jax.Array | None = None):
+    """Depthwise causal conv.  x: [B,S,C], w: [W,C].  ``prev``: [B,W-1,C]
+    carry-in for decode.  Returns (y, new_prev)."""
+    W = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((x.shape[0], W - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([prev, x], axis=1)  # [B, S+W-1, C]
+    y = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(W))
+    return y, xp[:, -(W - 1) :]
+
+
+# ------------------------------------------------------------------ mLSTM
+class MLSTMParams(NamedTuple):
+    ln: jax.Array  # [D]
+    w_up: jax.Array  # [D, P]   cell branch  (P = proj_factor * D)
+    w_gate: jax.Array  # [D, P] output-gate branch
+    conv_w: jax.Array  # [W, P]
+    wq: jax.Array  # [P, H, hd]
+    wk: jax.Array  # [P, H, hd]
+    wv: jax.Array  # [P, H, hd]
+    w_if: jax.Array  # [P, 2*H]  input/forget gate projections
+    gn: jax.Array  # [H, hd] group-norm scale
+    w_down: jax.Array  # [P, D]
+
+
+class MLSTMCache(NamedTuple):
+    C: jax.Array  # [B, H, hd, hd]
+    n: jax.Array  # [B, H, hd]
+    conv: jax.Array  # [B, W-1, P]
+
+
+def mlstm_init(key, cfg) -> MLSTMParams:
+    D = cfg.d_model
+    P = int(cfg.mlstm_proj_factor * D)
+    H = cfg.n_heads
+    hd = P // H
+    ks = common.split_keys(key, 7)
+    return MLSTMParams(
+        ln=jnp.zeros((D,), jnp.float32),
+        w_up=common.dense_init(ks[0], (D, P), D),
+        w_gate=common.dense_init(ks[1], (D, P), D),
+        conv_w=common.dense_init(ks[2], (cfg.conv1d_width, P), cfg.conv1d_width),
+        wq=common.dense_init(ks[3], (P, H, hd), P),
+        wk=common.dense_init(ks[4], (P, H, hd), P),
+        wv=common.dense_init(ks[5], (P, H, hd), P),
+        w_if=common.dense_init(ks[6], (P, 2 * H), P),
+        gn=jnp.ones((H, hd), jnp.float32),
+        w_down=common.dense_init(ks[0], (P, D), P),
+    )
+
+
+def mlstm_cache_init(cfg, batch, dtype) -> MLSTMCache:
+    D = cfg.d_model
+    P = int(cfg.mlstm_proj_factor * D)
+    H = cfg.n_heads
+    hd = P // H
+    return MLSTMCache(
+        C=jnp.zeros((batch, H, hd, hd), jnp.float32),
+        n=jnp.zeros((batch, H, hd), jnp.float32),
+        conv=jnp.zeros((batch, cfg.conv1d_width - 1, P), dtype),
+    )
+
+
+def _mlstm_gates(u, p, dt):
+    """i (clamped exp) and log-f (log-sigmoid) gates.  u: [B,S,P]."""
+    g = jnp.einsum("bsp,ph->bsh", u, p.w_if.astype(dt)).astype(jnp.float32)
+    H = g.shape[-1] // 2
+    i = jnp.exp(jnp.minimum(g[..., :H], 8.0))  # [B,S,H]
+    logf = jax.nn.log_sigmoid(g[..., H:])  # <= 0
+    return i, logf
+
+
+def _mlstm_chunk(carry, inp, scale):
+    """One chunk.  carry: (C [B,H,k,v], n [B,H,k]); inp: per-chunk tensors."""
+    C0, n0 = carry
+    q, k, v, i, logf = inp  # q,k,v: [B,L,H,hd] f32; i,logf: [B,L,H]
+    b = jnp.cumsum(logf, axis=1)  # [B,L,H] cumulative log-decay
+    bL = b[:, -1]  # [B,H]
+    # decay matrix D[t,s] = exp(b_t - b_s) * i_s   (s<=t)
+    L = q.shape[1]
+    dmat = b[:, :, None, :] - b[:, None, :, :]  # [B,t,s,H]
+    tri = (jnp.arange(L)[:, None] >= jnp.arange(L)[None, :])[None, :, :, None]
+    dmat = jnp.where(tri, jnp.exp(dmat) * i[:, None, :, :], 0.0)  # [B,t,s,H]
+    scores = jnp.einsum("bthd,bshd->btsh", q, k) * scale * dmat
+    intra = jnp.einsum("btsh,bshd->bthd", scores, v)
+    inter = jnp.exp(b)[..., None] * jnp.einsum("bthd,bhdk->bthk", q, C0)
+    n_t = jnp.exp(b)[..., None] * n0[:, None] + jnp.einsum("btsh,bshd->bthd", dmat, k)
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bthd,bthd->bth", q, n_t)), 1.0)
+    h = (intra + inter) / denom[..., None]  # [B,L,H,hd]
+    # state update to end of chunk
+    kdec = jnp.exp(bL[:, None] - b) [..., None] * (i[..., None] * k)  # [B,L,H,hd]
+    C1 = jnp.exp(bL)[..., None, None] * C0 + jnp.einsum("blhk,blhv->bhkv", kdec, v)
+    n1 = jnp.exp(bL)[..., None] * n0 + kdec.sum(1)
+    return (C1, n1), h
+
+
+def mlstm_apply(p: MLSTMParams, x, cfg, cache: MLSTMCache | None = None, decode=False):
+    """Full-sequence (chunkwise) or single-step (decode) mLSTM block."""
+    B, S, D = x.shape
+    dt = x.dtype
+    h_in = common.rms_norm(x, p.ln)
+    u = jnp.einsum("bsd,dp->bsp", h_in, p.w_up.astype(dt))
+    z = jnp.einsum("bsd,dp->bsp", h_in, p.w_gate.astype(dt))
+    conv_prev = cache.conv if cache is not None else None
+    uc, conv_new = causal_conv1d(u, p.conv_w.astype(dt), conv_prev)
+    uc = jax.nn.silu(uc)
+    H = p.wq.shape[1]
+    hd = p.wq.shape[2]
+    q = jnp.einsum("bsp,phk->bshk", uc, p.wq.astype(dt)).astype(jnp.float32)
+    k = jnp.einsum("bsp,phk->bshk", uc, p.wk.astype(dt)).astype(jnp.float32)
+    v = jnp.einsum("bsp,phk->bshk", u, p.wv.astype(dt)).astype(jnp.float32)
+    i, logf = _mlstm_gates(uc, p, dt)
+    scale = hd**-0.5
+
+    C0 = cache.C if cache is not None else jnp.zeros((B, H, hd, hd), jnp.float32)
+    n0 = cache.n if cache is not None else jnp.zeros((B, H, hd), jnp.float32)
+
+    if decode:  # S == 1 single step
+        f1 = jnp.exp(logf[:, 0])  # [B,H]
+        C1 = f1[..., None, None] * C0 + (i[:, 0, :, None] * k[:, 0])[..., :, None] * v[:, 0][..., None, :]
+        n1 = f1[..., None] * n0 + i[:, 0, :, None] * k[:, 0]
+        num = jnp.einsum("bhd,bhdk->bhk", q[:, 0] * scale, C1)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q[:, 0] * scale, n1)), 1.0)
+        h = (num / den[..., None])[:, None]  # [B,1,H,hd]
+        new_cache = MLSTMCache(C=C1, n=n1, conv=conv_new)
+    else:
+        L = min(MLSTM_CHUNK, S)
+        assert S % L == 0, (S, L)
+        nch = S // L
+        resh = lambda a: a.reshape(B, nch, L, *a.shape[2:]).swapaxes(0, 1)
+        (C1, n1), hs = jax.lax.scan(
+            lambda c, t: _mlstm_chunk(c, t, scale), (C0, n0),
+            (resh(q), resh(k), resh(v), resh(i), resh(logf)),
+        )
+        h = hs.swapaxes(0, 1).reshape(B, S, H, hd)
+        new_cache = MLSTMCache(C=C1, n=n1, conv=conv_new)
+
+    h = common.rms_norm(h.astype(dt), p.gn - 1.0)  # per-head group norm
+    out = (h.reshape(B, S, -1) * jax.nn.silu(z)).astype(dt)
+    return x + jnp.einsum("bsp,pd->bsd", out, p.w_down.astype(dt)), new_cache
+
+
+# ------------------------------------------------------------------ sLSTM
+class SLSTMParams(NamedTuple):
+    ln: jax.Array  # [D]
+    w: jax.Array  # [D, H, 4, hd]  (i, f, z, o projections)
+    r: jax.Array  # [H, hd, 4, hd] recurrent (block-diagonal per head)
+    b: jax.Array  # [H, 4, hd]
+    gn: jax.Array  # [H, hd]
+    w_up1: jax.Array  # [D, F]  post-cell gated FFN (proj_factor 4/3)
+    w_up2: jax.Array  # [D, F]
+    w_down: jax.Array  # [F, D]
+
+
+class SLSTMCache(NamedTuple):
+    c: jax.Array  # [B, H, hd]
+    n: jax.Array  # [B, H, hd]
+    h: jax.Array  # [B, H, hd]
+    m: jax.Array  # [B, H, hd] stabilizer
+
+
+def slstm_init(key, cfg) -> SLSTMParams:
+    D = cfg.d_model
+    H = cfg.n_heads
+    hd = D // H
+    F = int(cfg.slstm_proj_factor * D)
+    ks = common.split_keys(key, 5)
+    return SLSTMParams(
+        ln=jnp.zeros((D,), jnp.float32),
+        w=common.dense_init(ks[0], (D, H, 4, hd), D),
+        r=common.dense_init(ks[1], (H, hd, 4, hd), D // H),
+        b=jnp.zeros((H, 4, hd), jnp.float32),
+        gn=jnp.ones((H, hd), jnp.float32),
+        w_up1=common.dense_init(ks[2], (D, F), D),
+        w_up2=common.dense_init(ks[3], (D, F), D),
+        w_down=common.dense_init(ks[4], (F, D), F),
+    )
+
+
+def slstm_cache_init(cfg, batch, dtype) -> SLSTMCache:
+    H = cfg.n_heads
+    hd = cfg.d_model // H
+    z = lambda: jnp.zeros((batch, H, hd), jnp.float32)
+    return SLSTMCache(c=z(), n=z(), h=z(), m=z() - 10.0)
+
+
+def _slstm_cell(state: SLSTMCache, gx, r):
+    """gx: [B,H,4,hd] pre-activations from input; r: recurrent weights."""
+    c, n, h, m = state
+    g = gx + jnp.einsum("bhd,hdgk->bhgk", h, r)
+    it, ft, zt, ot = g[:, :, 0], g[:, :, 1], g[:, :, 2], g[:, :, 3]
+    logf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(logf + m, it)
+    i_s = jnp.exp(it - m_new)
+    f_s = jnp.exp(logf + m - m_new)
+    c_new = f_s * c + i_s * jnp.tanh(zt)
+    n_new = f_s * n + i_s
+    h_new = jax.nn.sigmoid(ot) * c_new / jnp.maximum(n_new, 1.0)
+    return SLSTMCache(c=c_new, n=n_new, h=h_new, m=m_new)
+
+
+def slstm_apply(p: SLSTMParams, x, cfg, cache: SLSTMCache | None = None, decode=False):
+    B, S, D = x.shape
+    dt = x.dtype
+    h_in = common.rms_norm(x, p.ln)
+    gx = jnp.einsum("bsd,dhgk->bshgk", h_in, p.w.astype(dt)).astype(jnp.float32)
+    gx = gx + p.b
+    r = p.r.astype(jnp.float32)
+    state = cache if cache is not None else slstm_cache_init(cfg, B, dt)
+
+    if decode:
+        state = _slstm_cell(state, gx[:, 0], r)
+        hs = state.h[:, None]  # [B,1,H,hd]
+    else:
+        def step(st, g):
+            st = _slstm_cell(st, g, r)
+            return st, st.h
+
+        state, hs = jax.lax.scan(step, state, gx.swapaxes(0, 1))
+        hs = hs.swapaxes(0, 1)  # [B,S,H,hd]
+
+    hs = common.rms_norm(hs.astype(dt), p.gn - 1.0).reshape(B, S, D)
+    up = jax.nn.silu(jnp.einsum("bsd,df->bsf", hs, p.w_up1.astype(dt)))
+    up = up * jnp.einsum("bsd,df->bsf", hs, p.w_up2.astype(dt))
+    return x + jnp.einsum("bsf,fd->bsd", up, p.w_down.astype(dt)), state
+
+
+# ------------------------------------------------------------------ RG-LRU
+class RGLRUParams(NamedTuple):
+    ln: jax.Array  # [D]
+    w_in: jax.Array  # [D, R]
+    w_gate: jax.Array  # [D, R]
+    conv_w: jax.Array  # [W, R]
+    w_rg: jax.Array  # [R, R] recurrence gate proj
+    w_ig: jax.Array  # [R, R] input gate proj
+    lam: jax.Array  # [R] Lambda (a = sigmoid(lam))
+    w_out: jax.Array  # [R, D]
+
+
+class RGLRUCache(NamedTuple):
+    h: jax.Array  # [B, R] f32
+    conv: jax.Array  # [B, W-1, R]
+
+
+def rglru_init(key, cfg) -> RGLRUParams:
+    D = cfg.d_model
+    R = cfg.rglru_width or cfg.d_model
+    ks = common.split_keys(key, 6)
+    # Lambda init so a^c in [0.9, 0.999]-ish
+    lam = jnp.log(jnp.linspace(0.9, 0.999, R) / (1 - jnp.linspace(0.9, 0.999, R)))
+    return RGLRUParams(
+        ln=jnp.zeros((D,), jnp.float32),
+        w_in=common.dense_init(ks[0], (D, R), D),
+        w_gate=common.dense_init(ks[1], (D, R), D),
+        conv_w=common.dense_init(ks[2], (cfg.conv1d_width, R), cfg.conv1d_width),
+        w_rg=common.dense_init(ks[3], (R, R), R),
+        w_ig=common.dense_init(ks[4], (R, R), R),
+        lam=lam.astype(jnp.float32),
+        w_out=common.dense_init(ks[5], (R, D), R),
+    )
+
+
+def rglru_cache_init(cfg, batch, dtype) -> RGLRUCache:
+    R = cfg.rglru_width or cfg.d_model
+    return RGLRUCache(
+        h=jnp.zeros((batch, R), jnp.float32),
+        conv=jnp.zeros((batch, cfg.conv1d_width - 1, R), dtype),
+    )
+
+
+_RGLRU_C = 8.0
+
+
+def _rglru_coeffs(xc, p, dt):
+    """a_t, b_t of h_t = a_t h + b_t.  xc: [B,S,R] conv'd input branch."""
+    rg = jax.nn.sigmoid(jnp.einsum("bsr,rq->bsq", xc, p.w_rg.astype(dt)).astype(jnp.float32))
+    ig = jax.nn.sigmoid(jnp.einsum("bsr,rq->bsq", xc, p.w_ig.astype(dt)).astype(jnp.float32))
+    log_a = -_RGLRU_C * rg * jax.nn.softplus(p.lam)  # <= 0
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6)) * ig * xc.astype(jnp.float32)
+    return a, b
+
+
+def rglru_apply(p: RGLRUParams, x, cfg, cache: RGLRUCache | None = None, decode=False):
+    B, S, D = x.shape
+    dt = x.dtype
+    hx = common.rms_norm(x, p.ln)
+    gate = jax.nn.gelu(jnp.einsum("bsd,dr->bsr", hx, p.w_gate.astype(dt)), approximate=True)
+    xin = jnp.einsum("bsd,dr->bsr", hx, p.w_in.astype(dt))
+    conv_prev = cache.conv if cache is not None else None
+    xc, conv_new = causal_conv1d(xin, p.conv_w.astype(dt), conv_prev)
+    a, b = _rglru_coeffs(xc, p, dt)  # [B,S,R] f32
+    h0 = cache.h if cache is not None else jnp.zeros((B, a.shape[-1]), jnp.float32)
+
+    if decode:
+        h1 = a[:, 0] * h0 + b[:, 0]
+        hs = h1[:, None]
+        new_cache = RGLRUCache(h=h1, conv=conv_new)
+    else:
+        # prepend the carry as a pseudo-step, associative scan, drop it
+        a_full = jnp.concatenate([jnp.ones_like(a[:, :1]), a], axis=1)
+        b_full = jnp.concatenate([h0[:, None], b], axis=1)
+
+        def comb(l, r):
+            return (l[0] * r[0], r[0] * l[1] + r[1])
+
+        _, hs_full = jax.lax.associative_scan(comb, (a_full, b_full), axis=1)
+        hs = hs_full[:, 1:]
+        new_cache = RGLRUCache(h=hs[:, -1], conv=conv_new)
+
+    out = (hs.astype(dt) * gate)
+    return x + jnp.einsum("bsr,rd->bsd", out, p.w_out.astype(dt)), new_cache

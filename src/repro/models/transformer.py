@@ -1,0 +1,217 @@
+"""Layer-stack machinery: heterogeneous superblocks under lax.scan.
+
+Every architecture is a *program*: an optional prelude, a repeating
+superblock (scanned ``n_super`` times — keeps HLO size O(1) in depth, the
+MaxText idiom), and an optional trailing partial block.  A superblock is a
+tuple of Units (attn / cross / mlp / moe / mlstm / slstm / rglru); per-unit
+params are stacked on a leading [n_super] axis, likewise caches, so scan
+carries stay homogeneous even for mixed-kind stacks (xLSTM's 7:1
+mLSTM/sLSTM blocks, RecurrentGemma's R-R-A pattern, Gemma2's local/global
+alternation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, mlp, moe, recurrent
+
+
+@dataclasses.dataclass(frozen=True)
+class Unit:
+    kind: str  # attn | cross | mlp | moe | mlstm | slstm | rglru
+    window: int = 0
+    causal: bool = True
+
+
+def block_program(cfg):
+    """(prelude, superblock, n_super, trailing) of Units for the decoder
+    stack (the encoder stack, if any, is uniform and built separately)."""
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        if cfg.local_global_alternate:
+            sb = (
+                Unit("attn", window=cfg.local_window),
+                Unit("mlp"),
+                Unit("attn"),
+                Unit("mlp"),
+            )
+            assert cfg.n_layers % 2 == 0
+            return (), sb, cfg.n_layers // 2, ()
+        return (), (Unit("attn"), Unit("mlp")), cfg.n_layers, ()
+    if fam == "moe":
+        return (), (Unit("attn"), Unit("moe")), cfg.n_layers, ()
+    if fam == "ssm":  # xLSTM 7:1
+        sb = tuple(Unit("mlstm") for _ in range(7)) + (Unit("slstm"),)
+        assert cfg.n_layers % 8 == 0
+        return (), sb, cfg.n_layers // 8, ()
+    if fam == "hybrid":  # RecurrentGemma (R, R, A) + MLP after each mixer
+        sb = (
+            Unit("rglru"), Unit("mlp"),
+            Unit("rglru"), Unit("mlp"),
+            Unit("attn", window=cfg.local_window), Unit("mlp"),
+        )
+        n = cfg.n_layers // 3
+        rem = cfg.n_layers % 3
+        trailing = (Unit("rglru"), Unit("mlp")) * rem
+        return (), sb, n, trailing
+    if fam == "audio":  # whisper decoder
+        return (), (Unit("attn"), Unit("cross", causal=False), Unit("mlp")), cfg.n_layers, ()
+    raise ValueError(fam)
+
+
+def encoder_program(cfg):
+    return (Unit("attn", causal=False), Unit("mlp")), cfg.n_encoder_layers
+
+
+# --------------------------------------------------------------- dispatch
+def unit_init(key, cfg, u: Unit):
+    if u.kind in ("attn", "cross"):
+        return attention.init(key, cfg)
+    if u.kind == "mlp":
+        return mlp.init(key, cfg)
+    if u.kind == "moe":
+        return moe.init(key, cfg)
+    if u.kind == "mlstm":
+        return recurrent.mlstm_init(key, cfg)
+    if u.kind == "slstm":
+        return recurrent.slstm_init(key, cfg)
+    if u.kind == "rglru":
+        return recurrent.rglru_init(key, cfg)
+    raise ValueError(u.kind)
+
+
+def unit_cache_init(cfg, u: Unit, batch, max_len, dtype):
+    if u.kind == "attn":
+        size = min(max_len, u.window * 2) if u.window else max_len
+        return attention.init_cache(cfg, batch, size, dtype)
+    if u.kind == "cross":
+        K, hd = cfg.n_kv_heads, cfg.hd
+        S = cfg.encoder_frames
+        return (jnp.zeros((batch, S, K, hd), dtype), jnp.zeros((batch, S, K, hd), dtype))
+    if u.kind == "mlstm":
+        return recurrent.mlstm_cache_init(cfg, batch, dtype)
+    if u.kind == "slstm":
+        return recurrent.slstm_cache_init(cfg, batch, dtype)
+    if u.kind == "rglru":
+        return recurrent.rglru_cache_init(cfg, batch, dtype)
+    return ()  # mlp/moe: stateless
+
+
+ZERO_AUX = ()
+
+
+def unit_apply(u: Unit, p, x, cfg, mode: str, cache, ctx: dict[str, Any]):
+    """Returns (x, new_cache, aux_losses tuple)."""
+    if isinstance(cache, tuple) and len(cache) == 0:
+        cache = None  # cache-less (train) scan placeholder
+    aux = jnp.zeros((), jnp.float32)
+    if u.kind == "attn":
+        if mode == "train":
+            x = attention.apply_full(p, x, cfg, window=u.window, is_causal=u.causal)
+            return x, (), aux
+        if mode == "prefill":
+            x, cache = attention.apply_prefill(p, x, cfg, cache, window=u.window)
+            return x, cache, aux
+        x, cache = attention.apply_decode(p, x, cfg, cache, window=u.window)
+        return x, cache, aux
+    if u.kind == "cross":
+        if mode in ("train", "prefill"):
+            kv = attention.encode_kv(p, ctx["enc_out"], cfg)
+            x = attention.apply_full(p, x, cfg, is_causal=False, kv_override=kv)
+            new_cache = kv if mode == "prefill" else cache
+            return x, new_cache, aux
+        x = attention.apply_full(p, x, cfg, is_causal=False, kv_override=cache)
+        return x, cache, aux
+    if u.kind == "mlp":
+        return mlp.apply(p, x, cfg), (), aux
+    if u.kind == "moe":
+        x, a = moe.apply(p, x, cfg)
+        return x, (), a["lb_loss"] + a["z_loss"]
+    if u.kind == "mlstm":
+        x, cache = recurrent.mlstm_apply(p, x, cfg, cache, decode=(mode == "decode"))
+        return x, (() if mode == "train" else cache), aux
+    if u.kind == "slstm":
+        x, cache = recurrent.slstm_apply(p, x, cfg, cache, decode=(mode == "decode"))
+        return x, (() if mode == "train" else cache), aux
+    if u.kind == "rglru":
+        x, cache = recurrent.rglru_apply(p, x, cfg, cache, decode=(mode == "decode"))
+        return x, (() if mode == "train" else cache), aux
+    raise ValueError(u.kind)
+
+
+# ------------------------------------------------------------------ stacks
+def init_stack(key, cfg, units: tuple[Unit, ...], n: int):
+    """Stacked params: tuple over units, each leaf [n, ...].  Initialized
+    via vmap over per-layer keys (single trace regardless of depth)."""
+    if n == 0 or not units:
+        return tuple(() for _ in units)
+    nk = len(units)
+
+    def one(layer_key):
+        ks = jax.random.split(layer_key, nk)
+        return tuple(unit_init(ks[j], cfg, u) for j, u in enumerate(units))
+
+    return jax.vmap(one)(jax.random.split(key, n))
+
+
+def stack_cache_init(cfg, units, n, batch, max_len, dtype):
+    one = tuple(unit_cache_init(cfg, u, batch, max_len, dtype) for u in units)
+    if n == 0:
+        return one
+    return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (n, *x.shape)).copy(), one)
+
+
+def _superblock_body(units, cfg, mode, ctx):
+    def body(x, per_layer):
+        params, cache = per_layer
+        new_caches = []
+        aux = jnp.zeros((), jnp.float32)
+        for j, u in enumerate(units):
+            c = cache[j] if cache is not None else None
+            x, nc, a = unit_apply(u, params[j], x, cfg, mode, c, ctx)
+            new_caches.append(nc)
+            aux = aux + a
+        return x, tuple(new_caches), aux
+
+    return body
+
+
+def apply_stack(params, x, cfg, units, n, mode: str, cache=None, ctx=None):
+    """Scan the superblock n times.  Returns (x, new_cache, aux_sum)."""
+    ctx = ctx or {}
+    if n == 0 or not units:
+        return x, cache, jnp.zeros((), jnp.float32)
+    body = _superblock_body(units, cfg, mode, ctx)
+
+    def scan_fn(x, xs):
+        p, c = xs
+        if cfg.remat == "full" and mode == "train":
+            x, nc, aux = jax.checkpoint(body)(x, (p, c))
+        elif cfg.remat == "dots" and mode == "train":
+            pol = jax.checkpoint_policies.checkpoint_dots
+            x, nc, aux = jax.checkpoint(body, policy=pol)(x, (p, c))
+        else:
+            x, nc, aux = body(x, (p, c))
+        return x, (nc, aux)
+
+    if cache is None:
+        cache = tuple(() for _ in units)  # empty pytree: no cache leaves
+    x, (new_cache, auxs) = jax.lax.scan(scan_fn, x, (params, cache))
+    return x, new_cache, jnp.sum(auxs)
+
+
+def apply_units_unstacked(params, x, cfg, units, mode, cache=None, ctx=None):
+    """Prelude/trailing blocks (not scanned)."""
+    ctx = ctx or {}
+    aux = jnp.zeros((), jnp.float32)
+    new_caches = []
+    for j, u in enumerate(units):
+        c = cache[j] if cache is not None else None
+        x, nc, a = unit_apply(u, params[j], x, cfg, mode, c, ctx)
+        new_caches.append(nc)
+        aux = aux + a
+    return x, tuple(new_caches), aux

@@ -1,0 +1,4 @@
+"""Fluid flow-level datacenter network simulator (the paper's NS3 stand-in)."""
+from repro.netsim import dcqcn, engine, metrics, topology, workloads
+
+__all__ = ["dcqcn", "engine", "metrics", "topology", "workloads"]

@@ -1,0 +1,121 @@
+"""Fluid DCQCN rate control (Zhu et al., SIGCOMM'15) — paper §IV "Flow CC".
+
+Per sub-flow state: current rate rc, target rate rt, alpha, and two timers.
+Per step the engine feeds each sub-flow the probability that at least one of
+its packets was ECN-marked during the step; a (deterministic, counter-hash)
+Bernoulli draw decides whether a CNP fires (CNPs are generated at most once
+per ``cnp_interval``).
+
+  on CNP:   rt <- rc;  rc <- rc*(1 - alpha/2);  alpha <- (1-g)alpha + g
+  no CNP:   alpha decays every ``alpha_interval``;
+            every ``rate_interval``: 5 stages of fast recovery
+            rc <- (rc+rt)/2, then additive increase rt += r_ai.
+
+Paper parameter sets: (Kmin,Kmax,Pmax) = (160KB,520KB,0.2) @40G testbed and
+(400KB,1600KB,0.2) @100G sim, from HPCC's recommendations [31].
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+
+class DCQCNParams(NamedTuple):
+    kmin_bytes: float = 400e3
+    kmax_bytes: float = 1600e3
+    pmax: float = 0.2
+    g: float = 1.0 / 256.0
+    r_ai: float = 1e9  # additive increase (bps); HPCC-style tuning for 100G
+    min_rate: float = 1e9
+    cnp_interval: float = 50e-6
+    alpha_interval: float = 55e-6
+    rate_interval: float = 55e-6
+    mtu_bytes: float = 1000.0
+
+
+class DCQCNState(NamedTuple):
+    rc: jax.Array  # f32[...] current rate (bps)
+    rt: jax.Array  # f32[...] target rate
+    alpha: jax.Array  # f32[...]
+    t_since_cnp: jax.Array  # f32[...]
+    t_since_rate: jax.Array  # f32[...]
+    recovery_stage: jax.Array  # f32[...] (blended)
+
+
+def init_state(shape, line_rate: float) -> DCQCNState:
+    f = lambda v: jnp.full(shape, v, jnp.float32)
+    return DCQCNState(
+        rc=f(line_rate),
+        rt=f(line_rate),
+        alpha=f(1.0),
+        t_since_cnp=f(1.0),
+        t_since_rate=f(0.0),
+        recovery_stage=jnp.zeros(shape, jnp.float32),
+    )
+
+
+def mark_probability(queue_bytes: jax.Array, p: DCQCNParams) -> jax.Array:
+    """RED-style ECN marking probability from instantaneous queue depth."""
+    ramp = (queue_bytes - p.kmin_bytes) / (p.kmax_bytes - p.kmin_bytes)
+    return jnp.where(
+        queue_bytes < p.kmin_bytes,
+        0.0,
+        jnp.where(queue_bytes > p.kmax_bytes, 1.0, ramp * p.pmax),
+    ).astype(jnp.float32)
+
+
+def step(
+    state: DCQCNState,
+    mark_frac: jax.Array,  # f32[...] per-packet mark prob seen this step
+    active: jax.Array,  # bool[...]
+    dt: float,
+    line_rate: jax.Array | float,
+    p: DCQCNParams,
+    step_idx: jax.Array = None,  # kept for API compat; unused (deterministic)
+    flow_salt: jax.Array = None,
+) -> tuple[DCQCNState, jax.Array]:
+    """One fluid step — the ODE (expected-value) form of DCQCN.
+
+    ``e`` = probability that a CNP fires this step; the CNP branch and the
+    recovery branch are blended with weight ``e``.  Deterministic: two
+    sub-flows on identical paths evolve identically (no sampling-noise
+    stragglers, which a fluid model must not have — a packet simulator
+    averages this noise over thousands of packets per interval).
+    Returns (new_state, e).
+    """
+    pkts = jnp.maximum(state.rc * dt / (8.0 * p.mtu_bytes), 1.0)
+    p_any = 1.0 - jnp.exp(pkts * jnp.log1p(-jnp.minimum(mark_frac, 0.999)))
+    gate = (state.t_since_cnp >= p.cnp_interval) & active
+    e = jnp.where(gate, p_any, 0.0).astype(jnp.float32)
+
+    # --- CNP branch
+    rt_c = state.rc
+    rc_c = jnp.maximum(state.rc * (1.0 - state.alpha / 2.0), p.min_rate)
+    alpha_c = (1.0 - p.g) * state.alpha + p.g
+
+    # --- no-CNP branch
+    t_rate = state.t_since_rate + dt
+    do_rate = t_rate >= p.rate_interval
+    in_recovery = state.recovery_stage < 5.0
+    rc_n = jnp.where(do_rate, (state.rc + state.rt) / 2.0, state.rc)
+    rt_n = jnp.where(do_rate & ~in_recovery, state.rt + p.r_ai, state.rt)
+    rt_n = jnp.minimum(rt_n, line_rate)
+    rc_n = jnp.minimum(rc_n, line_rate)
+    stage_n = jnp.where(do_rate, state.recovery_stage + 1.0, state.recovery_stage)
+    alpha_n = state.alpha * jnp.float32(1.0 - p.g) ** jnp.float32(dt / p.alpha_interval)
+
+    blend = lambda c, n: e * c + (1.0 - e) * n
+    new = DCQCNState(
+        rc=blend(rc_c, rc_n),
+        rt=blend(rt_c, rt_n),
+        alpha=blend(alpha_c, alpha_n),
+        t_since_cnp=blend(jnp.zeros_like(e), state.t_since_cnp + dt),
+        t_since_rate=blend(jnp.zeros_like(e), jnp.where(do_rate, 0.0, t_rate)),
+        recovery_stage=blend(jnp.zeros_like(e), stage_n),
+    )
+    # inactive sub-flows hold full rate so they start at line rate
+    new = jax.tree.map(lambda a, b: jnp.where(active, a, b), new, state)
+    return new, e

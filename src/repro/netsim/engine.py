@@ -1,0 +1,376 @@
+"""Fluid flow-level datacenter simulator — the NS3-equivalent (paper §IV).
+
+One jitted ``lax.scan`` over time steps of ``dt``.  The whole datacenter is
+a pytree: per-sub-flow transfer state, per-link queues, DCQCN rate state,
+and (for SeqBalance) the source-ToR Congestion Tables.  Five schemes share
+the step function; scheme choice is a *static* argument so each scheme
+compiles to its own specialized program.
+
+Fluid model recap (DESIGN.md §8):
+  offered[l]  = sum of sub-flow DCQCN rates crossing link l
+  scale[l]    = min(1, cap[l]/offered[l])           (switch serves at cap)
+  goodput_sf  = rc * min over the sub-flow's hops of scale
+  q[l]       += (offered[l] - cap[l])+ * dt          (congestion signal)
+  ECN mark    : RED ramp on q;   DCQCN reacts per sub-flow
+  SeqBalance  : fabric marks are mirrored to the source ToR as Congestion
+                Packets -> CongestionTable inactive for phi; NEW sub-flows
+                double-hash around inactive paths; placed sub-flows never
+                move (=> no reordering by construction).
+  DRILL       : per-packet spray -> per-step inverse-queue weights over all
+                paths; pays the go-back-N goodput penalty (core/gbn.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines, congestion_table as ctab, gbn, hashing, routing, shaper
+from repro.netsim import dcqcn as dcqcn_mod
+from repro.netsim.topology import Topology
+from repro.netsim.workloads import Trace
+
+SCHEMES = ("seqbalance", "ecmp", "letflow", "conga", "drill")
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    scheme: str = "seqbalance"
+    n_sub: int = 4  # N (SeqBalance Shaper); forced to 1 for other schemes
+    min_split_bytes: float = 16e3  # Shaper floor: WQEs below this stay whole
+    phi: float = 32e-6
+    flowlet_timeout: float = 100e-6
+    dt: float = 10e-6
+    duration_s: float = 20e-3
+    dcqcn: dcqcn_mod.DCQCNParams = dcqcn_mod.DCQCNParams()
+    gbn_window_pkts: float = 16.0
+    drill_jitter_mtus: float = 4.0
+    drill_q0: float = 1500.0
+    mark_salt: int = 0xA5A5
+    qmax_bytes: float = 8e6
+    # a path is declared congested when at least this many ECN-marked
+    # packets are mirrored back to the source ToR within one step (the
+    # expected-marks intensity; deterministic, avoids mark-noise herding)
+    cong_threshold_pkts: float = 1.0
+
+    def __post_init__(self):
+        assert self.scheme in SCHEMES, self.scheme
+        if self.scheme != "seqbalance":
+            object.__setattr__(self, "n_sub", 1)
+
+
+class SimState(NamedTuple):
+    remaining: jax.Array  # f32[F, N] bytes
+    path: jax.Array  # i32[F, N]
+    assigned: jax.Array  # bool[F]
+    sub_done: jax.Array  # bool[F, N]
+    finish: jax.Array  # f32[F] (+inf until CQE)
+    cc: dcqcn_mod.DCQCNState  # [F, N]
+    table: ctab.CongestionTable  # [n_leaf, n_paths]
+    queue: jax.Array  # f32[n_links+1]
+    cqe: shaper.CQEState  # [F]
+    cnp_pkts: jax.Array  # f32 scalar — Congestion Packet counter (Table II)
+    step: jax.Array  # i32
+
+
+class StepOutputs(NamedTuple):
+    uplink_load: jax.Array  # f32[n_leaf, n_uplinks] offered bps
+    goodput_total: jax.Array  # f32 scalar bps (sum of delivered)
+    cnp_rate: jax.Array  # f32 congestion packets this step
+    max_queue: jax.Array  # f32 bytes
+
+
+def _u32(x):
+    return jnp.asarray(x, jnp.uint32)
+
+
+def build_sim(topo: Topology, cfg: SimConfig, trace: Trace):
+    """Returns (init_state, step_fn, static) for the given scheme/topo/trace."""
+    F = len(trace.sizes)
+    N = cfg.n_sub
+    P = topo.n_paths
+    hpl = topo.hosts_per_leaf
+
+    sizes = jnp.asarray(trace.sizes)
+    arrivals = jnp.asarray(trace.arrivals)
+    src = jnp.asarray(trace.src)
+    dst = jnp.asarray(trace.dst)
+    fid = jnp.asarray(trace.flow_id)
+    valid = jnp.asarray(trace.valid)
+    src_leaf = src // hpl
+    dst_leaf = dst // hpl
+
+    sub_sizes = shaper.split_wqe(sizes, N)  # f32[F, N]
+    if N > 1:
+        # The Shaper only segments WQEs worth segmenting: below the floor a
+        # message rides a single QP (sub-WQE 0); its sibling slots carry
+        # zero bytes and are born completed (their CQE bits set trivially).
+        whole = jnp.concatenate(
+            [sizes[:, None], jnp.zeros((F, N - 1), sizes.dtype)], axis=1
+        )
+        split_mask = (sizes >= cfg.min_split_bytes)[:, None]
+        sub_sizes = jnp.where(split_mask, sub_sizes, whole)
+    # five-tuples: SeqBalance -> per-sub-flow QPs; others -> per-flow
+    s5 = shaper.subflow_five_tuples(src, dst, fid, N)  # each [F, N]
+    f5 = (_u32(src), _u32(dst), _u32(0xB000) + (hashing.fmix32(fid) % _u32(0x3FFF)),
+          jnp.full((F,), 4791, jnp.uint32))
+    sub_salt = hashing.fmix32(s5[2] ^ (_u32(fid)[:, None] * _u32(2246822519)))  # [F,N]
+    line_rate = topo.capacity[topo.n_links - 2 * topo.n_hosts]  # host_tx[0] bw
+
+    if cfg.scheme in ("conga", "drill"):
+        assert topo.kind == "leaf_spine", f"{cfg.scheme} is 2-tier only (paper §IV.B)"
+
+    nl = topo.n_links
+
+    def init_state() -> SimState:
+        return SimState(
+            remaining=sub_sizes,
+            path=jnp.full((F, N), -1, jnp.int32),
+            assigned=jnp.zeros((F,), bool),
+            sub_done=sub_sizes <= 0.0,
+            finish=jnp.full((F,), jnp.inf, jnp.float32),
+            cc=dcqcn_mod.init_state((F, N), line_rate),
+            table=ctab.CongestionTable.create(topo.n_leaf, P),
+            queue=jnp.zeros((nl + 1,), jnp.float32),
+            cqe=shaper.CQEState.create(F, N),
+            cnp_pkts=jnp.zeros((), jnp.float32),
+            step=jnp.zeros((), jnp.int32),
+        )
+
+    up0 = 0  # uplink block offset (leaf_spine); three_tier shares layout idea
+    dparams = cfg.dcqcn
+
+    def _path_queue_2tier(queue, sleaf, dleaf):
+        """q along each path for every flow: f32[F, P] (2-tier only)."""
+        S = P
+        L = topo.n_leaf
+        q_up = queue[up0 : up0 + L * S].reshape(L, S)
+        q_dn = queue[L * S : 2 * L * S].reshape(S, L)
+        return q_up[sleaf] + q_dn[:, :].T[dleaf]  # [F,P]
+
+    def _path_scale_2tier(scale, sleaf, dleaf):
+        S = P
+        L = topo.n_leaf
+        s_up = scale[up0 : up0 + L * S].reshape(L, S)
+        s_dn = scale[L * S : 2 * L * S].reshape(S, L)
+        return jnp.minimum(s_up[sleaf], s_dn.T[dleaf])  # [F,P]
+
+    def step_fn(state: SimState, _=None):
+        t = state.step.astype(jnp.float32) * cfg.dt
+        arrived = valid & (t >= arrivals)
+        newly = arrived & ~state.assigned
+        active_flow = state.assigned & jnp.isinf(state.finish)
+
+        # ---------------- path (re)assignment ----------------
+        path = state.path
+        if cfg.scheme == "seqbalance":
+            inact = ctab.inactive_matrix(state.table, t)  # [L, P]
+            # Congestion that is GLOBAL carries no routing signal: if more
+            # than half of a ToR's paths are marked, avoiding the marked
+            # ones just herds arrivals onto the remainder.  Treat the table
+            # as stale in that case and fall back to the plain hash (the
+            # paper's table is only ever differential: "the stored
+            # information pertains only to paths experiencing congestion").
+            stale = inact.sum(-1, keepdims=True) > (P // 2)
+            inact = jnp.where(stale, False, inact)
+            rows = inact[src_leaf][:, None, :]  # [F,1,P]
+            rows = jnp.broadcast_to(rows, (F, N, P))
+            p_new = routing.select_paths(*s5, rows, P)  # [F,N]
+            path = jnp.where(newly[:, None], p_new, path)
+        elif cfg.scheme == "ecmp":
+            p_new = routing.ecmp_paths(*f5, P)[:, None]
+            path = jnp.where(newly[:, None], p_new, path)
+        elif cfg.scheme in ("letflow", "conga"):
+            rng = hashing.fmix32(fid ^ _u32(state.step) * _u32(0x85EBCA77))
+            p_init = routing.ecmp_paths(*f5, P)
+            gap = baselines.flowlet_gap_occurs(
+                state.cc.rc[:, 0], dparams.mtu_bytes, cfg.flowlet_timeout
+            )
+            if cfg.scheme == "letflow":
+                p_re = baselines.letflow_paths(path[:, 0], gap, rng, P)
+            else:
+                # CONGA reroutes to the least-congested path, but only at a
+                # flowlet boundary; initial placement stays hash-based (the
+                # fluid model would otherwise herd every same-step arrival
+                # onto one path, which the real per-flowlet DRE feedback
+                # does not do).
+                pq = _path_queue_2tier(state.queue, src_leaf, dst_leaf)
+                p_re = baselines.conga_paths(path[:, 0], gap, pq)
+            p_next = jnp.where(newly, p_init, jnp.where(active_flow, p_re, path[:, 0]))
+            path = p_next[:, None]
+        else:  # drill: nominal path 0; real split via weights below
+            path = jnp.where(newly[:, None], 0, path)
+        assigned = state.assigned | newly
+
+        active = assigned[:, None] & ~state.sub_done & jnp.isinf(state.finish)[:, None]
+        # a sub-flow can never offer more than the bytes it still has to send
+        # (a 4 KB message is a 0.3 us burst at 100G, not a full dt of line rate)
+        rc = jnp.where(
+            active, jnp.minimum(state.cc.rc, state.remaining * 8.0 / cfg.dt), 0.0
+        )  # [F,N]
+
+        # -------- offered load, cascaded hop-by-hop (NIC serializes first,
+        # then fabric: a hop's arrivals are the UPSTREAM-scaled rates, so a
+        # host can never inject more than its NIC line rate into the fabric)
+        links = topo.subflow_links(src[:, None], dst[:, None], path)  # [F,N,6]
+        lid = jnp.where(links >= 0, links, nl)
+        h0 = nl - 2 * topo.n_hosts  # host_tx block offset
+
+        if cfg.scheme == "drill":
+            pq = _path_queue_2tier(state.queue, src_leaf, dst_leaf)  # [F,P]
+            w = baselines.drill_weights(pq, cfg.drill_q0) * active[:, 0:1]
+            L_, S_ = topo.n_leaf, P
+            arrival = jnp.zeros((nl + 1,), jnp.float32)
+            # hop 0: host NIC
+            tx_load = jax.ops.segment_sum(rc[:, 0], src, num_segments=topo.n_hosts)
+            arrival = arrival.at[h0 : h0 + topo.n_hosts].add(tx_load)
+            s_tx = jnp.minimum(1.0, topo.capacity[h0 + src] / jnp.maximum(tx_load[src], 1.0))
+            r0 = rc[:, 0] * s_tx  # [F]
+            # hop 1: uplinks (per-path split)
+            r0w = r0[:, None] * w  # [F,P]
+            up_load = jax.ops.segment_sum(r0w, src_leaf, num_segments=L_)  # [L,P]
+            arrival = arrival.at[up0 : up0 + L_ * S_].add(up_load.reshape(-1))
+            cap_up = topo.capacity[up0 : up0 + L_ * S_].reshape(L_, S_)
+            s_up = jnp.minimum(1.0, cap_up / jnp.maximum(up_load, 1.0))
+            r1 = r0w * s_up[src_leaf]  # [F,P]
+            # hop 2: downlinks
+            dn_load = jax.ops.segment_sum(r1, dst_leaf, num_segments=L_)  # [L,P] (by dst)
+            arrival = arrival.at[L_ * S_ : 2 * L_ * S_].add(dn_load.T.reshape(-1))
+            cap_dn = topo.capacity[L_ * S_ : 2 * L_ * S_].reshape(S_, L_)
+            s_dn = jnp.minimum(1.0, cap_dn.T / jnp.maximum(dn_load, 1.0))  # [L,P]
+            r2 = r1 * s_dn[dst_leaf]  # [F,P]
+            # hop 3: receiver NIC
+            r2sum = jnp.sum(r2, -1)
+            rx_load = jax.ops.segment_sum(r2sum, dst, num_segments=topo.n_hosts)
+            arrival = arrival.at[h0 + topo.n_hosts : h0 + 2 * topo.n_hosts].add(rx_load)
+            s_rx = jnp.minimum(
+                1.0, topo.capacity[h0 + topo.n_hosts + dst] / jnp.maximum(rx_load[dst], 1.0)
+            )
+            thr = r2sum * s_rx  # [F]
+        else:
+            r = rc  # [F,N]
+            arrival = jnp.zeros((nl + 1,), jnp.float32)
+            for h in range(6):
+                lh = lid[:, :, h]
+                load_h = jax.ops.segment_sum(r.reshape(-1), lh.reshape(-1), num_segments=nl + 1)
+                arrival = arrival + load_h.at[nl].set(0.0)
+                s_h = jnp.minimum(1.0, topo.capacity[lh] / jnp.maximum(load_h[lh], 1.0))
+                r = r * jnp.where(links[:, :, h] >= 0, s_h, 1.0)
+            thr = r  # [F,N] delivered rate after all hops
+
+        new_queue = jnp.clip(
+            state.queue + (arrival - topo.capacity) * cfg.dt / 8.0, 0.0, cfg.qmax_bytes
+        )
+        # host_tx backlog is NIC-internal (no ECN there); switch queues mark.
+        new_queue = new_queue.at[h0 : h0 + topo.n_hosts].set(0.0)
+        p_mark = dcqcn_mod.mark_probability(new_queue, dparams)  # [nl+1]
+        p_mark = p_mark.at[nl].set(0.0)
+
+        # ---------------- per-sub-flow ECN marks ----------------
+        if cfg.scheme == "drill":
+            L_, S_ = topo.n_leaf, P
+            pm_up = p_mark[up0 : up0 + L_ * S_].reshape(L_, S_)[src_leaf]
+            pm_dn = p_mark[L_ * S_ : 2 * L_ * S_].reshape(S_, L_).T[dst_leaf]
+            pm_fab = 1.0 - (1.0 - pm_up) * (1.0 - pm_dn)  # [F,P]
+            p_sub_fabric = jnp.sum(w * pm_fab, -1, keepdims=True)
+            p_host = p_mark[h0 + topo.n_hosts + dst]
+            p_sub = 1.0 - (1.0 - p_sub_fabric) * (1.0 - p_host[:, None])
+            # go-back-N penalty: packets of ONE QP sprayed over paths whose
+            # queueing delays differ get reordered; even with equal AVERAGE
+            # queues, per-packet occupancy jitter of O(queue) reorders at
+            # high rate.  spread = max over used paths of |delay - min|,
+            # floored by the jitter of the mean queue.
+            d_path = pq * 8.0 / jnp.maximum(topo.capacity[up0], 1.0)  # [F,P] seconds
+            used = w > (0.5 / P)
+            dmax = jnp.max(jnp.where(used, d_path, -jnp.inf), -1)
+            dmin = jnp.min(jnp.where(used, d_path, jnp.inf), -1)
+            spread = jnp.where(jnp.isfinite(dmax) & jnp.isfinite(dmin), dmax - dmin, 0.0)
+            mean_q = jnp.sum(jnp.where(used, pq, 0.0), -1) / jnp.maximum(
+                jnp.sum(used, -1), 1
+            )
+            jitter_bytes = jnp.minimum(0.5 * mean_q, cfg.drill_jitter_mtus * dparams.mtu_bytes)
+            jitter = jitter_bytes * 8.0 / jnp.maximum(topo.capacity[up0], 1.0)
+            p_ooo = gbn.ooo_probability(jnp.maximum(spread, jitter), rc[:, 0], dparams.mtu_bytes)
+            thr = thr * gbn.gbn_goodput_factor(p_ooo, cfg.gbn_window_pkts)
+            thr = thr[:, None]  # [F,1]
+        else:
+            hop_mark = jnp.where(links >= 0, p_mark[lid], 0.0)
+            p_sub = 1.0 - jnp.prod(1.0 - hop_mark, axis=-1)  # [F,N]
+            fabric = links[..., 1:5]
+            fab_mark = jnp.where(fabric >= 0, p_mark[jnp.where(fabric >= 0, fabric, nl)], 0.0)
+            p_sub_fabric = 1.0 - jnp.prod(1.0 - fab_mark, axis=-1)
+
+        # ---------------- transfer progress & CQE ----------------
+        delivered = thr * cfg.dt / 8.0  # bytes
+        new_remaining = jnp.maximum(state.remaining - jnp.where(active, delivered, 0.0), 0.0)
+        sub_done = assigned[:, None] & (new_remaining <= 0.0)
+        cqe = shaper.ack_mask(state.cqe, sub_done)
+        all_done = shaper.cqe_ready(cqe) & assigned & valid
+        finish = jnp.where(jnp.isinf(state.finish) & all_done, t + cfg.dt, state.finish)
+
+        # ---------------- DCQCN ----------------
+        flow_salt = sub_salt if cfg.scheme == "seqbalance" else sub_salt[:, :1]
+        flow_salt = jnp.broadcast_to(flow_salt, (F, N))
+        cc, _ = dcqcn_mod.step(
+            state.cc, p_sub, active, cfg.dt, line_rate, dparams, state.step, flow_salt
+        )
+
+        # ---------------- SeqBalance Congestion Packets ----------------
+        table = state.table
+        pkts = jnp.where(active, rc * cfg.dt / (8.0 * dparams.mtu_bytes), 0.0)
+        exp_cong_pkts = jnp.sum(pkts * p_sub_fabric)  # mirrored-packet count
+        if cfg.scheme == "seqbalance":
+            # expected number of marked data packets per (source ToR, path)
+            # this step = expected Congestion Packets mirrored back; the
+            # source ToR marks the path inactive when at least one arrives.
+            intensity = jnp.zeros((topo.n_leaf, P), jnp.float32)
+            idx_leaf = jnp.broadcast_to(src_leaf[:, None], (F, N)).reshape(-1)
+            idx_path = jnp.clip(path, 0, P - 1).reshape(-1)
+            intensity = intensity.at[idx_leaf, idx_path].add(
+                (pkts * p_sub_fabric).reshape(-1)
+            )
+            dense = intensity >= cfg.cong_threshold_pkts
+            table = ctab.mark_congested_dense(table, dense, t, cfg.phi)
+
+        new_state = SimState(
+            remaining=new_remaining,
+            path=path,
+            assigned=assigned,
+            sub_done=sub_done,
+            finish=finish,
+            cc=cc,
+            table=table,
+            queue=new_queue,
+            cqe=cqe,
+            cnp_pkts=state.cnp_pkts + exp_cong_pkts,
+            step=state.step + 1,
+        )
+        out = StepOutputs(
+            uplink_load=arrival[jnp.asarray(topo.uplink_ids)],
+            goodput_total=jnp.sum(jnp.where(active, thr, 0.0)),
+            cnp_rate=exp_cong_pkts,
+            max_queue=jnp.max(new_queue[:nl]),
+        )
+        return new_state, out
+
+    return init_state, step_fn
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1))
+def _run(topo: Topology, cfg: SimConfig, trace_arrays):
+    trace = Trace(*trace_arrays)
+    init_state, step_fn = build_sim(topo, cfg, trace)
+    n_steps = int(round(cfg.duration_s / cfg.dt))
+    final, outs = jax.lax.scan(step_fn, init_state(), None, length=n_steps)
+    return final, outs
+
+
+def simulate(topo: Topology, cfg: SimConfig, trace: Trace) -> tuple[SimState, StepOutputs]:
+    """Run the fluid simulation; returns (final_state, per-step outputs)."""
+    arrays = (trace.sizes, trace.arrivals, trace.src, trace.dst, trace.flow_id, trace.valid)
+    arrays = tuple(jnp.asarray(a) for a in arrays)
+    return _run(topo, cfg, arrays)

@@ -1,0 +1,67 @@
+"""FCT / slowdown / imbalance metrics (paper §IV performance metrics)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.netsim.engine import SimState, StepOutputs
+from repro.netsim.topology import Topology
+from repro.netsim.workloads import Trace
+
+
+def fct_stats(state: SimState, trace: Trace, topo: Topology, host_bw: float) -> dict:
+    """FCT slowdown: actual FCT normalized to the FCT in an idle network
+    (serialization at host line rate + one base RTT)."""
+    finish = np.asarray(state.finish)
+    arrivals = trace.arrivals
+    done = np.isfinite(finish) & trace.valid
+    if not done.any():
+        return dict(n=0, avg_fct=np.nan, p99_fct=np.nan, avg_slowdown=np.nan,
+                    p99_slowdown=np.nan, completion_rate=0.0)
+    fct = finish[done] - arrivals[done]
+    ideal = trace.sizes[done] * 8.0 / host_bw + topo.base_rtt_s
+    slow = fct / ideal
+    return dict(
+        n=int(done.sum()),
+        completion_rate=float(done.sum() / max(trace.valid.sum(), 1)),
+        avg_fct=float(fct.mean()),
+        p99_fct=float(np.percentile(fct, 99)),
+        avg_slowdown=float(slow.mean()),
+        p99_slowdown=float(np.percentile(slow, 99)),
+    )
+
+
+def throughput_imbalance(outs: StepOutputs, sample_every: int = 10) -> np.ndarray:
+    """Paper's imbalance metric per ToR: (max uplink tput - min)/avg, sampled
+    every ``sample_every`` steps (=100 us at dt=10 us).  Returns the flat
+    sample population (for CDF plotting).  ToR/sample points with zero
+    traffic are dropped."""
+    up = np.asarray(outs.uplink_load)  # [T, L, S]
+    T = (up.shape[0] // sample_every) * sample_every
+    up = up[:T].reshape(-1, sample_every, *up.shape[1:]).mean(axis=1)  # [T', L, S]
+    avg = up.mean(axis=-1)
+    imb = (up.max(axis=-1) - up.min(axis=-1)) / np.maximum(avg, 1e-9)
+    return imb[avg > 1e6].ravel()
+
+
+def cdf(samples: np.ndarray, points: int = 50) -> tuple[np.ndarray, np.ndarray]:
+    xs = np.sort(samples)
+    ys = np.arange(1, len(xs) + 1) / len(xs)
+    if len(xs) > points:
+        idx = np.linspace(0, len(xs) - 1, points).astype(int)
+        xs, ys = xs[idx], ys[idx]
+    return xs, ys
+
+
+def congestion_packet_bandwidth(state: SimState, duration_s: float,
+                                pkt_bytes: float = 64.0) -> float:
+    """Table II: bps consumed by mirrored Congestion Packets."""
+    return float(state.cnp_pkts) * pkt_bytes * 8.0 / duration_s
+
+
+def port_rate_timeseries(outs: StepOutputs, leaf: int, dt: float,
+                         window_s: float = 1e-3) -> np.ndarray:
+    """Per-uplink offered rate for one leaf, window-averaged (Fig. 10/11)."""
+    up = np.asarray(outs.uplink_load)[:, leaf, :]  # [T, S]
+    k = max(1, int(window_s / dt))
+    T = (up.shape[0] // k) * k
+    return up[:T].reshape(-1, k, up.shape[1]).mean(axis=1)

@@ -1,0 +1,222 @@
+"""Datacenter topologies for the netsim engine (paper §IV).
+
+Two builders, matching the paper's evaluation setups:
+
+  * ``leaf_spine``  — 2-tier Clos (testbed: 2 leaves x 4 spines x 3 hosts
+    @40G; large sim: 8 leaves x 12 spines x 16 hosts @100G).  A path between
+    two leaves is identified by the spine it crosses -> n_paths = n_spine.
+  * ``three_tier``  — the paper's "FatTree" (16 core / 20 agg / 20 ToR /
+    16 hosts per ToR; ToR-agg 400G, others 100G).  We model it as a folded
+    Clos with full bipartite ToR<->Agg and Agg<->Core and symmetric
+    up/down routing, so a path is (agg, core): n_paths = n_agg * n_core =
+    320 <= 1023, which — pleasingly — fits the paper's 10-bit PathTag.
+
+Links live in one flat capacity vector; every (sub-)flow touches at most
+``MAX_HOPS`` links: [host_tx, up1, (up2), (dn1), dn2, host_rx], padded with
+-1.  The engine scatter-adds offered rates over these ids (the same
+computation the linkload Pallas kernel implements for the TPU target).
+
+Asymmetry (paper Fig. 8b/11): ``capacity_overrides`` rescales individual
+links — e.g. kill spine 3 and double spine 2's leaf links to 80G.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+MAX_HOPS = 6
+
+
+@dataclasses.dataclass(frozen=True, eq=False)  # eq=False: identity hash so the
+class Topology:  # instance can be a jit static argument (fields hold arrays)
+    """Static topology description (closed over by the jitted engine)."""
+
+    kind: str
+    n_leaf: int
+    n_paths: int
+    hosts_per_leaf: int
+    n_links: int
+    capacity: jax.Array  # f32[n_links + 1] bps; last slot = dummy sink for -1
+    # f(src_host, dst_host, path) -> int32[..., MAX_HOPS] link ids (-1 pad)
+    subflow_links: Callable
+    # fabric-only view used for congestion metrics / imbalance:
+    uplink_ids: np.ndarray  # int32[n_leaf, n_uplinks] — ToR uplink link ids
+    base_rtt_s: float
+    # (leaf, path) -> util: engine computes from link loads via these ids
+    path_link_table: np.ndarray  # int32[n_leaf, n_leaf, n_paths, MAX_HOPS-2] fabric hops
+
+    @property
+    def n_hosts(self) -> int:
+        return self.n_leaf * self.hosts_per_leaf
+
+    def leaf_of(self, host):
+        return host // self.hosts_per_leaf
+
+
+def _apply_overrides(cap: np.ndarray, overrides):
+    for link_id, new_cap in (overrides or {}).items():
+        cap[link_id] = new_cap
+    return cap
+
+
+def leaf_spine(
+    n_leaf: int,
+    n_spine: int,
+    hosts_per_leaf: int,
+    link_bw: float,
+    host_bw: float | None = None,
+    base_rtt_s: float = 4e-6,
+    capacity_overrides: dict[int, float] | None = None,
+) -> Topology:
+    """2-tier Clos.  Link layout:
+    up[l,s]   = l*S + s
+    down[s,l] = L*S + s*L + l
+    host_tx[h]= L*S + S*L + h
+    host_rx[h]= L*S + S*L + H + h
+    """
+    L, S, H = n_leaf, n_spine, n_leaf * hosts_per_leaf
+    host_bw = link_bw if host_bw is None else host_bw
+    n_links = L * S + S * L + 2 * H
+    cap = np.zeros(n_links + 1, np.float32)
+    cap[: L * S] = link_bw
+    cap[L * S : 2 * L * S] = link_bw
+    cap[2 * L * S : 2 * L * S + 2 * H] = host_bw
+    cap[-1] = np.float32(1e30)  # dummy sink — -1 hops land here
+    cap = _apply_overrides(cap, capacity_overrides)
+
+    up0, dn0, tx0, rx0 = 0, L * S, 2 * L * S, 2 * L * S + H
+
+    def subflow_links(src_host, dst_host, path):
+        shp = jnp.broadcast_shapes(jnp.shape(src_host), jnp.shape(dst_host), jnp.shape(path))
+        src_host, dst_host, path = (jnp.broadcast_to(a, shp) for a in (src_host, dst_host, path))
+        src_leaf = src_host // hosts_per_leaf
+        dst_leaf = dst_host // hosts_per_leaf
+        inter = src_leaf != dst_leaf
+        up = jnp.where(inter, up0 + src_leaf * S + path, -1)
+        dn = jnp.where(inter, dn0 + path * L + dst_leaf, -1)
+        tx = tx0 + src_host
+        rx = rx0 + dst_host
+        pad = jnp.full_like(tx, -1)
+        return jnp.stack([tx, up, pad, pad, dn, rx], axis=-1).astype(jnp.int32)
+
+    uplink_ids = (np.arange(L)[:, None] * S + np.arange(S)[None, :]).astype(np.int32)
+
+    plt = np.full((L, L, S, MAX_HOPS - 2), -1, np.int32)
+    for sl in range(L):
+        for dl in range(L):
+            if sl == dl:
+                continue
+            for p in range(S):
+                plt[sl, dl, p, 0] = up0 + sl * S + p
+                plt[sl, dl, p, 3] = dn0 + p * L + dl
+    return Topology(
+        kind="leaf_spine",
+        n_leaf=L,
+        n_paths=S,
+        hosts_per_leaf=hosts_per_leaf,
+        n_links=n_links,
+        capacity=jnp.asarray(cap),
+        subflow_links=subflow_links,
+        uplink_ids=uplink_ids,
+        base_rtt_s=base_rtt_s,
+        path_link_table=plt,
+    )
+
+
+def three_tier(
+    n_tor: int = 20,
+    n_agg: int = 20,
+    n_core: int = 16,
+    hosts_per_tor: int = 16,
+    bw_tor_agg: float = 400e9,
+    bw_agg_core: float = 100e9,
+    host_bw: float = 100e9,
+    base_rtt_s: float = 8e-6,
+    capacity_overrides: dict[int, float] | None = None,
+) -> Topology:
+    """3-tier folded Clos (paper Fig. 14 setup).  Path id = agg*n_core+core.
+    Link layout:
+      ta_up[t,a] = t*A + a
+      ac_up[a,c] = T*A + a*C + c
+      ca_dn[c,a] = T*A + A*C + c*A + a
+      at_dn[a,t] = T*A + 2*A*C + a*T + t
+      host_tx[h], host_rx[h] appended.
+    """
+    T, A, C = n_tor, n_agg, n_core
+    H = T * hosts_per_tor
+    n_links = T * A + 2 * A * C + A * T + 2 * H
+    cap = np.zeros(n_links + 1, np.float32)
+    ta0, ac0 = 0, T * A
+    ca0 = T * A + A * C
+    at0 = T * A + 2 * A * C
+    tx0 = T * A + 2 * A * C + A * T
+    rx0 = tx0 + H
+    cap[ta0 : ta0 + T * A] = bw_tor_agg
+    cap[ac0 : ac0 + A * C] = bw_agg_core
+    cap[ca0 : ca0 + C * A] = bw_agg_core
+    cap[at0 : at0 + A * T] = bw_tor_agg
+    cap[tx0 : tx0 + 2 * H] = host_bw
+    cap[-1] = np.float32(1e30)
+    cap = _apply_overrides(cap, capacity_overrides)
+
+    def subflow_links(src_host, dst_host, path):
+        shp = jnp.broadcast_shapes(jnp.shape(src_host), jnp.shape(dst_host), jnp.shape(path))
+        src_host, dst_host, path = (jnp.broadcast_to(a, shp) for a in (src_host, dst_host, path))
+        src_tor = src_host // hosts_per_tor
+        dst_tor = dst_host // hosts_per_tor
+        inter = src_tor != dst_tor
+        agg = path // C
+        core = path % C
+        up1 = jnp.where(inter, ta0 + src_tor * A + agg, -1)
+        up2 = jnp.where(inter, ac0 + agg * C + core, -1)
+        dn1 = jnp.where(inter, ca0 + core * A + agg, -1)
+        dn2 = jnp.where(inter, at0 + agg * T + dst_tor, -1)
+        tx = tx0 + src_host
+        rx = rx0 + dst_host
+        return jnp.stack([tx, up1, up2, dn1, dn2, rx], axis=-1).astype(jnp.int32)
+
+    uplink_ids = (np.arange(T)[:, None] * A + np.arange(A)[None, :]).astype(np.int32)
+
+    # path_link_table would be [20,20,320,4] = 512k int32 — built lazily by
+    # schemes that need it (CONGA is 2-tier-only per the paper, so none do).
+    plt = np.zeros((0,), np.int32)
+    return Topology(
+        kind="three_tier",
+        n_leaf=T,
+        n_paths=A * C,
+        hosts_per_leaf=hosts_per_tor,
+        n_links=n_links,
+        capacity=jnp.asarray(cap),
+        subflow_links=subflow_links,
+        uplink_ids=uplink_ids,
+        base_rtt_s=base_rtt_s,
+        path_link_table=plt,
+    )
+
+
+def testbed_symmetric() -> Topology:
+    """Paper Fig. 8(a): 2 leaves x 4 spines, 3 hosts/leaf, all 40G."""
+    return leaf_spine(2, 4, 3, 40e9, base_rtt_s=4e-6)
+
+
+def testbed_asymmetric() -> Topology:
+    """Paper Fig. 8(b): one spine deactivated and its links redirected to a
+    neighbour -> 3 usable paths, one of them 80G while the rest stay 40G.
+    ECMP still hashes uniformly over the 3 paths (it cannot see the extra
+    capacity); SeqBalance's congestion feedback steers load toward the fat
+    path — the paper measures +37.6 % total throughput from this."""
+    L, S = 2, 3
+    overrides = {}
+    for leaf in range(L):
+        overrides[leaf * S + 2] = 80e9  # up[l,2] doubled
+        overrides[L * S + 2 * L + leaf] = 80e9  # down[2,l] doubled
+    return leaf_spine(2, 3, 3, 40e9, base_rtt_s=4e-6, capacity_overrides=overrides)
+
+
+def sim_2tier() -> Topology:
+    """Paper §IV.B: 8 leaves x 12 spines x 16 hosts, 100G everywhere."""
+    return leaf_spine(8, 12, 16, 100e9, base_rtt_s=4e-6)

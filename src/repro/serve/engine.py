@@ -1,0 +1,83 @@
+"""Batched serving engine: fixed-slot continuous batching over the
+prefill/decode step functions.
+
+Requests are admitted into ``batch_size`` slots; every engine tick runs one
+decode step for all active slots (one compiled program, no reshapes —
+finished slots keep decoding into a scratch position and are masked out,
+the standard TPU serving pattern).  Prefill runs per admission batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # i32[prompt_len]
+    max_new_tokens: int
+    out_tokens: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg, params, batch_size: int, max_len: int,
+                 stop_token: int | None = None):
+        self.cfg = cfg
+        self.params = params
+        self.B = batch_size
+        self.max_len = max_len
+        self.stop_token = stop_token
+        self.cache = None
+        self.active: list[Request | None] = [None] * batch_size
+        self.remaining = np.zeros(batch_size, np.int64)
+        self._decode = jax.jit(
+            lambda p, t, c: model.decode_step(p, self.cfg, t, c), static_argnums=()
+        )
+
+    def admit(self, requests: list[Request]):
+        """Admit a full batch (prefill).  Slot-aligned prompts are padded to
+        the longest prompt; shorter prompts left-pad with token 1."""
+        assert len(requests) <= self.B
+        L = max(len(r.prompt) for r in requests)
+        toks = np.ones((self.B, L), np.int32)
+        for i, r in enumerate(requests):
+            toks[i, L - len(r.prompt):] = r.prompt
+            self.active[i] = r
+            self.remaining[i] = r.max_new_tokens
+        batch = {"tokens": jnp.asarray(toks)}
+        logits, self.cache = model.prefill(self.params, self.cfg, batch, self.max_len)
+        self._next = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        for i, r in enumerate(requests):
+            r.out_tokens.append(int(self._next[i, 0]))
+            self.remaining[i] -= 1
+
+    def step(self) -> int:
+        """One decode tick for every active slot; returns #active."""
+        logits, self.cache = self._decode(self.params, self._next, self.cache)
+        self._next = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        n_active = 0
+        host_next = np.asarray(self._next)
+        for i, r in enumerate(self.active):
+            if r is None or r.done:
+                continue
+            tok = int(host_next[i, 0])
+            r.out_tokens.append(tok)
+            self.remaining[i] -= 1
+            if self.remaining[i] <= 0 or (self.stop_token is not None and tok == self.stop_token):
+                r.done = True
+            else:
+                n_active += 1
+        return n_active
+
+    def run(self) -> list[Request]:
+        while self.step() > 0:
+            pass
+        return [r for r in self.active if r is not None]

@@ -1,0 +1,94 @@
+"""Fault-tolerant checkpointing: atomic, content-hashed, async-capable.
+
+Layout: <dir>/step_<n>/  { manifest.json, <leaf-id>.npy ... }
+Writes go to a tmp dir and are renamed into place only after fsync — a
+crash mid-save never corrupts the latest valid checkpoint.  Each leaf
+records a SHA-256 in the manifest; restore verifies integrity before
+handing weights back (bit-rot / torn-write detection at 1000-node scale).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+
+import jax
+import numpy as np
+
+
+def _leaf_id(path) -> str:
+    return jax.tree_util.keystr(path).replace("/", "_").replace("'", "").replace("[", ".").replace(
+        "]", ""
+    ).strip(".")
+
+
+def save(ckpt_dir: str, step: int, tree, *, blocking: bool = True):
+    """Checkpoint a pytree.  With blocking=False the serialization happens
+    on a daemon thread (straggler mitigation: the train loop never stalls
+    on I/O); the atomic rename still guarantees consistency."""
+    host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+
+    def work():
+        final = os.path.join(ckpt_dir, f"step_{step:08d}")
+        # unique tmp per writer: an async save and a final blocking save of
+        # the same step must never share a staging dir (first one wins)
+        tmp = final + f".tmp.{os.getpid()}.{threading.get_ident()}"
+        os.makedirs(tmp, exist_ok=True)
+        manifest = {"step": step, "leaves": {}}
+        for path, leaf in jax.tree_util.tree_flatten_with_path(host_tree)[0]:
+            lid = _leaf_id(path)
+            arr = np.asarray(leaf)
+            fn = os.path.join(tmp, lid + ".npy")
+            np.save(fn, arr)
+            h = hashlib.sha256(arr.tobytes()).hexdigest()
+            manifest["leaves"][lid] = {
+                "shape": list(arr.shape), "dtype": str(arr.dtype), "sha256": h,
+            }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):  # another writer already landed this step
+            shutil.rmtree(tmp)
+            return
+        os.rename(tmp, final)
+
+    if blocking:
+        work()
+        return None
+    t = threading.Thread(target=work, daemon=True)
+    t.start()
+    return t
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [
+        int(d.split("_")[1])
+        for d in os.listdir(ckpt_dir)
+        if d.startswith("step_") and ".tmp" not in d
+    ]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like_tree):
+    """Restore into the structure of ``like_tree`` with integrity checks."""
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    def load(path, like):
+        lid = _leaf_id(path)
+        meta = manifest["leaves"][lid]
+        arr = np.load(os.path.join(d, lid + ".npy"))
+        h = hashlib.sha256(arr.tobytes()).hexdigest()
+        if h != meta["sha256"]:
+            raise IOError(f"checkpoint integrity failure for leaf {lid}")
+        if list(arr.shape) != list(np.shape(like)):
+            raise ValueError(f"shape mismatch for {lid}: {arr.shape} vs {np.shape(like)}")
+        return arr
+
+    return jax.tree_util.tree_map_with_path(load, like_tree)

@@ -1,0 +1,179 @@
+"""Unit + property tests for the SeqBalance core (paper mechanisms)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import baselines, congestion_table as ctab, gbn, hashing, routing, shaper
+
+
+# ------------------------------------------------------------------ shaper
+@settings(max_examples=200, deadline=None)
+@given(st.integers(0, 2**28), st.integers(1, 32))
+def test_split_wqe_conserves_and_balances(size, n):
+    parts = np.asarray(shaper.split_wqe(jnp.asarray(size, jnp.int32), n))
+    assert parts.sum() == size  # no byte lost or invented
+    assert parts.max() - parts.min() <= 1  # "sub-flows of equal size"
+    assert (parts >= 0).all()
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(1.0, 1e9), st.integers(1, 16))
+def test_split_wqe_float_fluid(size, n):
+    parts = np.asarray(shaper.split_wqe(jnp.asarray(size, jnp.float32), n))
+    np.testing.assert_allclose(parts.sum(), size, rtol=1e-5)
+    assert np.ptp(parts) < 1e-3 * size + 1e-6
+
+
+def test_subflow_five_tuples_distinct():
+    """Each sub-WQE rides its own QP -> distinct sports -> distinct hashes
+    (the entropy multiplication that makes ECMP-style hashing work for AI
+    traffic, paper §III.C)."""
+    src, dst, sport, dport = shaper.subflow_five_tuples(
+        jnp.uint32(5), jnp.uint32(9), jnp.uint32(1234), 8
+    )
+    assert len(set(np.asarray(sport).tolist())) == 8
+    h = hashing.hash_five_tuple(src, dst, sport, dport)
+    assert len(set(np.asarray(h).tolist())) == 8
+
+
+# ------------------------------------------------------------------- CQE
+def test_cqe_bitmap_complete_only_when_all_acked():
+    st_ = shaper.CQEState.create(3, jnp.array([4, 2, 1]))
+    st_ = shaper.ack_mask(st_, jnp.array([[1, 1, 1, 0], [1, 1, 0, 0], [1, 0, 0, 0]], bool))
+    ready = np.asarray(shaper.cqe_ready(st_))
+    assert ready.tolist() == [False, True, True]
+    st_ = shaper.ack_subwqe(st_, jnp.array([0]), jnp.array([3]))
+    assert bool(shaper.cqe_ready(st_)[0])
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(1, 32), st.sets(st.integers(0, 31), max_size=32))
+def test_cqe_bitmap_property(n_sub, acks):
+    st_ = shaper.CQEState.create(1, n_sub)
+    mask = np.zeros((1, 32), bool)
+    for a in acks:
+        mask[0, a] = True
+    st_ = shaper.ack_mask(st_, jnp.asarray(mask[:, :32]))
+    expect = set(range(n_sub)).issubset(acks)
+    assert bool(shaper.cqe_ready(st_)[0]) == expect
+    assert int(shaper.popcount32(st_.bitmap)[0]) == len(acks)
+
+
+def test_ack_idempotent():
+    st_ = shaper.CQEState.create(1, 4)
+    for _ in range(3):
+        st_ = shaper.ack_subwqe(st_, jnp.array([0]), jnp.array([1]))
+    assert int(shaper.popcount32(st_.bitmap)[0]) == 1
+
+
+# -------------------------------------------------------- congestion table
+def test_congestion_table_phi_expiry_and_refresh():
+    t = ctab.CongestionTable.create(2, 8)
+    t = ctab.mark_congested(t, jnp.array([0]), jnp.array([3]), now=10.0, phi=2.0)
+    assert bool(ctab.is_inactive(t, jnp.array([0]), jnp.array([3]), 11.9))
+    assert not bool(ctab.is_inactive(t, jnp.array([0]), jnp.array([3]), 12.1))
+    # refresh restarts the timer (paper: "restarting the timing from phi")
+    t = ctab.mark_congested(t, jnp.array([0]), jnp.array([3]), now=11.0, phi=2.0)
+    assert bool(ctab.is_inactive(t, jnp.array([0]), jnp.array([3]), 12.5))
+    assert not bool(ctab.is_inactive(t, jnp.array([0]), jnp.array([3]), 13.1))
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.floats(0.0, 100.0), st.floats(0.1, 50.0), st.floats(0.0, 200.0))
+def test_congestion_table_monotone(now, phi, query):
+    t = ctab.CongestionTable.create(1, 4)
+    t = ctab.mark_congested(t, jnp.array([0]), jnp.array([1]), now=now, phi=phi)
+    inactive = bool(ctab.is_inactive(t, jnp.array([0]), jnp.array([1]), query))
+    # expiry arithmetic happens in f32 inside the table
+    expiry = float(np.float32(np.float32(now) + np.float32(phi)))
+    assert inactive == (np.float32(query) < expiry)
+
+
+def test_congestion_table_occupancy_small():
+    """Paper §V: switch memory for the table is bounded by path count."""
+    t = ctab.CongestionTable.create(4, 16)
+    t = ctab.mark_congested(t, jnp.array([0, 0, 1]), jnp.array([1, 2, 5]), 0.0, 1.0)
+    assert int(ctab.occupancy(t, 0.5).sum()) == 3
+
+
+# ---------------------------------------------------------------- routing
+def test_select_paths_avoids_inactive():
+    inact = jnp.zeros((64, 8), bool).at[:, [2, 5]].set(True)
+    src = jnp.arange(64, dtype=jnp.uint32)
+    p = routing.select_paths(src, 1, 2, 3, inact, 8)
+    assert not np.isin(np.asarray(p), [2, 5]).any()
+
+
+def test_select_paths_all_inactive_falls_back_to_hash():
+    inact = jnp.ones((16, 8), bool)
+    src = jnp.arange(16, dtype=jnp.uint32)
+    p = routing.select_paths(src, 1, 2, 3, inact, 8)
+    e = routing.ecmp_paths(src, jnp.uint32(1), jnp.uint32(2), jnp.uint32(3), 8)
+    np.testing.assert_array_equal(np.asarray(p), np.asarray(e))
+
+
+def test_routing_deterministic_no_reorder():
+    """Same five-tuple + same table state => same path: packets of one
+    sub-flow can never diverge (the no-reordering invariant)."""
+    inact = jnp.zeros((8, 8), bool).at[:, 0].set(True)
+    src = jnp.arange(8, dtype=jnp.uint32)
+    p1 = routing.select_paths(src, 7, 9, 4791, inact, 8)
+    p2 = routing.select_paths(src, 7, 9, 4791, inact, 8)
+    np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+
+
+def test_ecmp_uniformity():
+    n = 20000
+    src = jnp.arange(n, dtype=jnp.uint32)
+    p = np.asarray(routing.ecmp_paths(src, jnp.uint32(1), jnp.uint32(2), jnp.uint32(3), 12))
+    counts = np.bincount(p, minlength=12)
+    assert counts.min() > n / 12 * 0.9 and counts.max() < n / 12 * 1.1
+
+
+# ------------------------------------------------------------------ hashes
+@settings(max_examples=200, deadline=None)
+@given(st.integers(0, 2**32 - 1))
+def test_fmix32_bijective_nontrivial(x):
+    h = int(hashing.fmix32(jnp.uint32(x)))
+    assert 0 <= h < 2**32
+    if x != 0:
+        assert h != x or x in (0,)  # avalanche makes fixed points unlikely
+
+
+def test_double_hash_covers_all_paths_pow2():
+    h1 = jnp.uint32(12345)
+    h2 = jnp.uint32(999)
+    seq = np.asarray(hashing.double_hash_sequence(h1, h2, 8, 8))
+    assert sorted(seq.tolist()) == list(range(8))  # odd stride => full cycle
+
+
+# -------------------------------------------------------------------- GBN
+def test_table1_inflation_matches_paper():
+    """Table I: one delayed packet -> >=3x FCT; small flows hurt more."""
+    r64 = float(gbn.table1_inflation(jnp.float32(64e3)))
+    r1m = float(gbn.table1_inflation(jnp.float32(1e6)))
+    assert r64 == pytest.approx(5.77, rel=0.05)
+    assert r1m == pytest.approx(3.01, rel=0.15)
+    assert r64 > r1m > 2.8  # "minimum threefold increase" (approx)
+
+
+def test_gbn_goodput_monotone():
+    p = jnp.linspace(0, 1, 11)
+    g = np.asarray(gbn.gbn_goodput_factor(p, 16))
+    assert (np.diff(g) < 0).all() and g[0] == 1.0
+
+
+def test_flowlet_gap_rdma_vs_tcp():
+    """Fig. 1's mechanism: at RDMA line rates the inter-packet gap never
+    exceeds the flowlet timeout, so flowlets cannot be detected."""
+    gap_rdma = bool(baselines.flowlet_gap_occurs(jnp.float32(25e9), 1000.0, 100e-6))
+    gap_slow = bool(baselines.flowlet_gap_occurs(jnp.float32(50e6), 1000.0, 100e-6))
+    assert not gap_rdma and gap_slow
+
+
+def test_drill_weights_prefer_short_queues():
+    q = jnp.array([[0.0, 1e6, 1e6, 1e6]])
+    w = np.asarray(baselines.drill_weights(q))
+    assert w.argmax() == 0 and w.sum() == pytest.approx(1.0, abs=1e-5)

@@ -1,0 +1,83 @@
+"""Per-kernel allclose vs the ref.py oracles, swept over shapes/dtypes
+(interpret mode executes the kernel body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import flash_attention as fa, linkload as ll, ref
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+@pytest.mark.parametrize("S,H,K,hd", [(128, 4, 4, 32), (256, 4, 2, 64), (256, 8, 1, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_shapes_dtypes(S, H, K, hd, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    B = 2
+    q = _rand(ks[0], (B, S, H, hd), dtype)
+    k = _rand(ks[1], (B, S, K, hd), dtype)
+    v = _rand(ks[2], (B, S, K, hd), dtype)
+    out = fa.flash_attention(q, k, v, block_q=64, block_k=64, interpret=True)
+    want = ref.flash_attention_ref(q, k, v)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32), atol=tol, rtol=tol
+    )
+
+
+@pytest.mark.parametrize("window", [0, 32, 100])
+def test_flash_attention_window(window):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    B, S, H, hd = 1, 256, 2, 32
+    q, k, v = (_rand(ks[i], (B, S, H, hd), jnp.float32) for i in range(3))
+    out = fa.flash_attention(q, k, v, window=window, block_q=64, block_k=64, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("softcap", [0.0, 10.0, 50.0])
+def test_flash_attention_softcap(softcap):
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    B, S, H, hd = 1, 128, 2, 32
+    q, k, v = (_rand(ks[i], (B, S, H, hd), jnp.float32) for i in range(3))
+    out = fa.flash_attention(q, k, v, softcap=softcap, block_q=64, block_k=64, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, softcap=softcap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=3e-5, rtol=3e-5)
+
+
+def test_flash_attention_block_shape_invariance():
+    """Different BlockSpec tilings must give identical results."""
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    B, S, H, hd = 1, 256, 2, 32
+    q, k, v = (_rand(ks[i], (B, S, H, hd), jnp.float32) for i in range(3))
+    o1 = fa.flash_attention(q, k, v, block_q=64, block_k=64, interpret=True)
+    o2 = fa.flash_attention(q, k, v, block_q=128, block_k=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("n,hops,L", [(100, 2, 50), (1000, 6, 200), (513, 4, 300)])
+def test_linkload_sweep(n, hops, L):
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    lid = jax.random.randint(ks[0], (n, hops), -1, L).astype(jnp.int32)
+    rates = jax.random.uniform(ks[1], (n,)) * 1e9
+    queue = jax.random.uniform(ks[2], (L,)) * 2e6
+    cap = jnp.full((L,), 4e10)
+    l1, q1, m1 = ll.linkload(lid, rates, queue, cap, n_links=L, interpret=True)
+    l2, q2, m2 = ref.linkload_ref(lid, rates, L, 400e3, 1600e3, 0.2, queue, cap, 10e-6)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(q1), np.asarray(q2), rtol=1e-4, atol=1.0)
+    np.testing.assert_allclose(np.asarray(m1), np.asarray(m2), atol=1e-6)
+
+
+def test_linkload_drop_sentinel():
+    """-1 hops must not contribute anywhere."""
+    lid = jnp.array([[0, -1], [1, -1]], jnp.int32)
+    rates = jnp.array([5.0, 7.0])
+    queue = jnp.zeros((3,))
+    cap = jnp.full((3,), 1e12)
+    l1, _, _ = ll.linkload(lid, rates, queue, cap, n_links=3, interpret=True)
+    np.testing.assert_allclose(np.asarray(l1), [5.0, 7.0, 0.0], atol=1e-6)

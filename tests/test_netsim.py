@@ -1,0 +1,141 @@
+"""Integration + property tests for the fluid network simulator."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.netsim import engine, metrics, topology, workloads
+from repro.netsim.dcqcn import DCQCNParams
+
+
+def small_topo():
+    return topology.leaf_spine(2, 4, 4, 100e9)
+
+
+def small_trace(topo, load=0.5, dur=1.5e-3, wl="alistorage", seed=0):
+    return workloads.poisson_trace(workloads.TraceConfig(
+        workload=wl, load=load, duration_s=dur, n_hosts=topo.n_hosts,
+        host_bw=100e9, seed=seed, hosts_per_leaf=topo.hosts_per_leaf,
+        load_base_bw=2 * 4 * 100e9,
+    ))
+
+
+def run(topo, trace, scheme="seqbalance", dur=6e-3, **kw):
+    cfg = engine.SimConfig(scheme=scheme, duration_s=dur, **kw)
+    return engine.simulate(topo, cfg, trace), cfg
+
+
+def test_conservation_all_bytes_delivered():
+    """Every completed flow delivered exactly its size (no byte created or
+    destroyed by the fluid model)."""
+    topo = small_topo()
+    trace = small_trace(topo)
+    (st, outs), _ = run(topo, trace)
+    done = np.isfinite(np.asarray(st.finish))
+    assert done.any()
+    rem = np.asarray(st.remaining).sum(-1)
+    np.testing.assert_allclose(rem[done], 0.0, atol=1.0)
+    # and goodput integral roughly equals delivered bytes
+    delivered = (trace.sizes * done).sum()
+    good = np.asarray(outs.goodput_total).sum() * 10e-6 / 8.0
+    assert good >= delivered * 0.9
+
+
+def test_fct_positive_and_after_arrival():
+    topo = small_topo()
+    trace = small_trace(topo)
+    (st, _), _ = run(topo, trace)
+    fin = np.asarray(st.finish)
+    done = np.isfinite(fin)
+    assert (fin[done] >= trace.arrivals[done]).all()
+
+
+def test_letflow_conga_collapse_to_ecmp_under_rdma():
+    """Paper Fig. 1 consequence: no flowlet gaps at RDMA rates, so flowlet
+    schemes never reroute and match ECMP exactly."""
+    topo = small_topo()
+    trace = small_trace(topo)
+    res = {}
+    for scheme in ("ecmp", "letflow", "conga"):
+        (st, _), _ = run(topo, trace, scheme)
+        res[scheme] = np.asarray(st.finish)
+    np.testing.assert_allclose(res["letflow"], res["ecmp"], rtol=1e-6)
+    np.testing.assert_allclose(res["conga"], res["ecmp"], rtol=1e-6)
+
+
+def test_seqbalance_beats_ecmp_elephant_regime():
+    """The paper's motivating traffic mode: few large flows, low entropy."""
+    topo = topology.leaf_spine(4, 8, 8, 100e9)
+    trace = workloads.poisson_trace(workloads.TraceConfig(
+        workload="fixed:10e6", load=0.6, duration_s=6e-3, n_hosts=topo.n_hosts,
+        host_bw=100e9, seed=3, hosts_per_leaf=topo.hosts_per_leaf,
+        load_base_bw=4 * 8 * 100e9,
+    ))
+    (st_sb, out_sb), _ = run(topo, trace, "seqbalance", dur=25e-3)
+    (st_ec, out_ec), _ = run(topo, trace, "ecmp", dur=25e-3)
+    s_sb = metrics.fct_stats(st_sb, trace, topo, 100e9)
+    s_ec = metrics.fct_stats(st_ec, trace, topo, 100e9)
+    assert s_sb["avg_slowdown"] < s_ec["avg_slowdown"]
+    imb_sb = np.median(metrics.throughput_imbalance(out_sb))
+    imb_ec = np.median(metrics.throughput_imbalance(out_ec))
+    assert imb_sb < imb_ec  # Fig. 7/13: much better balance
+
+
+def test_drill_pays_gbn_penalty_under_load():
+    topo = small_topo()
+    trace = small_trace(topo, load=0.7, wl="websearch", dur=2e-3)
+    (st_dr, _), _ = run(topo, trace, "drill", dur=10e-3)
+    (st_ec, _), _ = run(topo, trace, "ecmp", dur=10e-3)
+    s_dr = metrics.fct_stats(st_dr, trace, topo, 100e9)
+    s_ec = metrics.fct_stats(st_ec, trace, topo, 100e9)
+    assert s_dr["avg_slowdown"] > s_ec["avg_slowdown"]
+
+
+def test_asymmetric_seqbalance_uses_fat_path():
+    topo = topology.testbed_asymmetric()
+    pairs = [(i, 3 + i) for i in range(3) for _ in range(4)]
+    trace = workloads.permanent_senders_trace(pairs, [0.0] * 12, 2e8)
+    dc40 = DCQCNParams(kmin_bytes=160e3, kmax_bytes=520e3, r_ai=400e6, min_rate=400e6)
+    cfg = engine.SimConfig(scheme="seqbalance", duration_s=8e-3, dcqcn=dc40)
+    st, outs = engine.simulate(topo, cfg, trace)
+    up = np.asarray(outs.uplink_load)[:, 0, :]  # leaf0, 3 paths
+    late = up[400:].mean(0)
+    assert late[2] > late[:2].max()  # 80G path carries the most traffic
+
+
+def test_congestion_packets_negligible_when_balanced():
+    """Table II: a balanced fabric generates ~no Congestion Packets."""
+    topo = topology.testbed_symmetric()
+    pairs = [(0, 3), (1, 4)]
+    trace = workloads.permanent_senders_trace(pairs, [0.0, 0.0], 1e8)
+    dc40 = DCQCNParams(kmin_bytes=160e3, kmax_bytes=520e3)
+    cfg = engine.SimConfig(scheme="seqbalance", duration_s=5e-3, dcqcn=dc40)
+    st, _ = engine.simulate(topo, cfg, trace)
+    bw = metrics.congestion_packet_bandwidth(st, 5e-3)
+    assert bw < 0.01 * 40e9  # well under 1% of a link
+
+
+def test_three_tier_topology_runs_all_supported_schemes():
+    topo = topology.three_tier(n_tor=4, n_agg=4, n_core=2, hosts_per_tor=2)
+    trace = workloads.poisson_trace(workloads.TraceConfig(
+        workload="alistorage", load=0.4, duration_s=1e-3, n_hosts=topo.n_hosts,
+        host_bw=100e9, seed=0, hosts_per_leaf=topo.hosts_per_leaf,
+    ))
+    for scheme in ("ecmp", "letflow", "seqbalance"):
+        (st, _), _ = run(topo, trace, scheme, dur=4e-3)
+        assert np.isfinite(np.asarray(st.finish)).any(), scheme
+
+
+def test_workload_sampler_statistics():
+    cdf = workloads.WORKLOADS["websearch"]
+    rng = np.random.default_rng(0)
+    s = workloads.sample_sizes(cdf, 20000, rng)
+    assert abs(np.mean(s) / workloads.cdf_mean(cdf) - 1) < 0.15
+    assert s.min() >= cdf[0, 0] and s.max() <= cdf[-1, 0]
+
+
+def test_trace_inter_rack_only():
+    topo = small_topo()
+    tr = small_trace(topo)
+    src_leaf = tr.src // topo.hosts_per_leaf
+    dst_leaf = tr.dst // topo.hosts_per_leaf
+    assert (src_leaf[tr.valid] != dst_leaf[tr.valid]).all()
