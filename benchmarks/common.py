@@ -1,11 +1,21 @@
-"""Shared benchmark helpers: timing + CSV emission + sim runners."""
+"""Shared benchmark helpers: timing + CSV emission + sim runners.
+
+``run_sim`` routes through the active-window compact engine by default
+(netsim/sweep.py); pass ``dense=True`` (or set REPRO_DENSE_ENGINE=1) for the
+dense oracle.  ``run_sim_batch`` runs a list of traces as ONE vmapped
+computation per (scheme, topology) — the fast path for the Fig. 12-14
+sweeps.  ``PERF`` collects machine-readable perf records that
+benchmarks/run.py dumps to BENCH_netsim.json.
+"""
 from __future__ import annotations
 
+import os
 import time
 
 import numpy as np
 
 ROWS = []
+PERF = {}
 
 
 def emit(name: str, us_per_call: float, derived: str):
@@ -23,15 +33,49 @@ def timed(fn, *args, repeat: int = 1, **kw):
     return out, dt * 1e6
 
 
-def run_sim(topo, trace, scheme: str, duration_s: float, **cfg_kw):
-    from repro.netsim import engine, metrics
+def run_sim(topo, trace, scheme: str, duration_s: float, dense: bool = False, **cfg_kw):
+    """One simulation; returns (state_like, per-step outputs, wall_us).
+
+    The returned state duck-types the fields the metrics layer reads
+    (``finish``, ``cnp_pkts``) for both engines."""
+    from repro.netsim import engine, sweep
 
     cfg = engine.SimConfig(scheme=scheme, duration_s=duration_s, **cfg_kw)
     t0 = time.time()
-    st, outs = engine.simulate(topo, cfg, trace)
-    st.finish.block_until_ready()
+    if dense or os.environ.get("REPRO_DENSE_ENGINE"):
+        st, outs = engine.simulate(topo, cfg, trace)
+        st.finish.block_until_ready()
+    else:
+        st, outs = sweep.run_one(topo, cfg, trace)
     wall_us = (time.time() - t0) * 1e6
     return st, outs, wall_us
+
+
+def run_sim_batch(topo, traces, scheme: str, duration_s: float, **cfg_kw):
+    """All traces under one (scheme, topo) static pair as a single vmapped
+    run.  Returns (list[(state_like, outs)], wall_us)."""
+    from repro.netsim import engine, sweep
+
+    cfg = engine.SimConfig(scheme=scheme, duration_s=duration_s, **cfg_kw)
+    t0 = time.time()
+    results, outs_list = sweep.run_batch(topo, cfg, traces)
+    wall_us = (time.time() - t0) * 1e6
+    return list(zip(results, outs_list)), wall_us
+
+
+def run_sim_jobs(topo, traces, schemes, duration_s: float, **cfg_kw):
+    """One sweep job per scheme, run concurrently (netsim/sweep.run_jobs).
+    Returns ({scheme: [(state_like, outs), ...]}, wall_us)."""
+    from repro.netsim import engine, sweep
+
+    jobs = [
+        (topo, engine.SimConfig(scheme=s, duration_s=duration_s, **cfg_kw), traces)
+        for s in schemes
+    ]
+    t0 = time.time()
+    out = sweep.run_jobs(jobs)
+    wall_us = (time.time() - t0) * 1e6
+    return {s: list(zip(r, o)) for s, (r, o) in zip(schemes, out)}, wall_us
 
 
 def fct(st, trace, topo, host_bw):

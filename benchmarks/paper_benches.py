@@ -8,7 +8,9 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import emit, fct, run_sim, timed
+from benchmarks.common import (
+    PERF, emit, fct, run_sim, run_sim_batch, run_sim_jobs, timed,
+)
 
 
 # ------------------------------------------------------------- Table I
@@ -164,24 +166,35 @@ def _poisson(topo, wl, load, dur, seed=1):
     ))
 
 
+def fig12_cases(fast=True):
+    loads = (0.5, 0.8) if fast else (0.3, 0.4, 0.5, 0.6, 0.7, 0.8)
+    return [(wl, load) for wl in ("alistorage", "websearch") for load in loads]
+
+
 def bench_fig12_fct_2tier(fast=True):
     from repro.netsim import topology
 
     topo = topology.sim_2tier()
-    loads = (0.5, 0.8) if fast else (0.3, 0.4, 0.5, 0.6, 0.7, 0.8)
     arr = 2.5e-3 if fast else 10e-3
-    for wl in ("alistorage", "websearch"):
-        for load in loads:
-            trace = _poisson(topo, wl, load, arr)
-            base = {}
-            for scheme in ("ecmp", "seqbalance", "letflow", "conga", "drill"):
-                st, outs, us = run_sim(topo, trace, scheme, arr * 4)
-                s = fct(st, trace, topo, 100e9)
-                base[scheme] = s
-                emit(f"fig12_{wl}_{int(load*100)}_{scheme}", us,
-                     f"avg_slow_{s['avg_slowdown']:.2f}_p99_{s['p99_slowdown']:.1f}_comp_{s['completion_rate']:.3f}")
-            g = (1 - base["seqbalance"]["p99_slowdown"] / base["ecmp"]["p99_slowdown"]) * 100
-            emit(f"fig12_{wl}_{int(load*100)}_gain", 0.0, f"seq_vs_ecmp_p99_{g:+.1f}%")
+    cases = fig12_cases(fast)
+    traces = {c: _poisson(topo, c[0], c[1], arr) for c in cases}
+    schemes = ("ecmp", "seqbalance", "letflow", "conga", "drill")
+    # one vmapped sweep job per scheme over every (workload, load) trace,
+    # all five jobs running concurrently
+    results, us = run_sim_jobs(topo, [traces[c] for c in cases], schemes, arr * 4)
+    stats = {}
+    for scheme in schemes:
+        for c, (st, outs) in zip(cases, results[scheme]):
+            stats[(scheme, c)] = fct(st, traces[c], topo, 100e9)
+        for c in cases:
+            s = stats[(scheme, c)]
+            emit(f"fig12_{c[0]}_{int(c[1]*100)}_{scheme}",
+                 us / (len(cases) * len(schemes)),
+                 f"avg_slow_{s['avg_slowdown']:.2f}_p99_{s['p99_slowdown']:.1f}_comp_{s['completion_rate']:.3f}")
+    for c in cases:
+        g = (1 - stats[("seqbalance", c)]["p99_slowdown"]
+             / stats[("ecmp", c)]["p99_slowdown"]) * 100
+        emit(f"fig12_{c[0]}_{int(c[1]*100)}_gain", 0.0, f"seq_vs_ecmp_p99_{g:+.1f}%")
 
 
 def bench_fig13_imbalance(fast=True):
@@ -189,14 +202,17 @@ def bench_fig13_imbalance(fast=True):
 
     topo = topology.sim_2tier()
     arr = 2e-3 if fast else 10e-3
-    for wl in ("alistorage", "websearch"):
-        trace = _poisson(topo, wl, 0.8, arr)
-        for scheme in ("ecmp", "seqbalance", "conga", "drill"):
-            st, outs, us = run_sim(topo, trace, scheme, arr * 2)
+    wls = ("alistorage", "websearch")
+    schemes = ("ecmp", "seqbalance", "conga", "drill")
+    traces = [_poisson(topo, wl, 0.8, arr) for wl in wls]
+    results, us = run_sim_jobs(topo, traces, schemes, arr * 2)
+    for scheme in schemes:
+        for wl, (st, outs) in zip(wls, results[scheme]):
             imb = metrics.throughput_imbalance(outs)
             med = float(np.median(imb)) if len(imb) else -1
             p90 = float(np.percentile(imb, 90)) if len(imb) else -1
-            emit(f"fig13_{wl}_{scheme}", us, f"imb_median_{med:.3f}_p90_{p90:.3f}")
+            emit(f"fig13_{wl}_{scheme}", us / (len(wls) * len(schemes)),
+                 f"imb_median_{med:.3f}_p90_{p90:.3f}")
 
 
 # ------------------------------------------------------- Fig. 14 (3-tier)
@@ -210,21 +226,86 @@ def bench_fig14_fct_3tier(fast=True):
         topo = topology.three_tier()  # paper scale: 20/20/16, 320 hosts
     arr = 1.5e-3 if fast else 8e-3
     fabric = topo.n_leaf * 4 * 100e9
-    for wl in ("alistorage", "websearch"):
-        trace = workloads.poisson_trace(workloads.TraceConfig(
-            workload=wl, load=0.6, duration_s=arr, n_hosts=topo.n_hosts,
-            host_bw=100e9, seed=2, hosts_per_leaf=topo.hosts_per_leaf,
-            load_base_bw=fabric,
-        ))
-        base = {}
-        for scheme in ("ecmp", "letflow", "seqbalance"):
-            st, outs, us = run_sim(topo, trace, scheme, arr * 4)
+    wls = ("alistorage", "websearch")
+    traces = [workloads.poisson_trace(workloads.TraceConfig(
+        workload=wl, load=0.6, duration_s=arr, n_hosts=topo.n_hosts,
+        host_bw=100e9, seed=2, hosts_per_leaf=topo.hosts_per_leaf,
+        load_base_bw=fabric,
+    )) for wl in wls]
+    schemes = ("ecmp", "letflow", "seqbalance")
+    results, us = run_sim_jobs(topo, traces, schemes, arr * 4)
+    stats = {}
+    for scheme in schemes:
+        for wl, trace, (st, outs) in zip(wls, traces, results[scheme]):
             s = fct(st, trace, topo, 100e9)
-            base[scheme] = s
-            emit(f"fig14_{wl}_{scheme}", us,
+            stats[(scheme, wl)] = s
+            emit(f"fig14_{wl}_{scheme}", us / (len(wls) * len(schemes)),
                  f"avg_slow_{s['avg_slowdown']:.2f}_p99_{s['p99_slowdown']:.1f}")
-        g = (1 - base["seqbalance"]["p99_slowdown"] / base["ecmp"]["p99_slowdown"]) * 100
+    for wl in wls:
+        g = (1 - stats[("seqbalance", wl)]["p99_slowdown"]
+             / stats[("ecmp", wl)]["p99_slowdown"]) * 100
         emit(f"fig14_{wl}_gain", 0.0, f"seq_vs_ecmp_p99_{g:+.1f}%")
+
+
+# ------------------------------------------------- §Perf (DESIGN.md §9)
+def bench_netsim_speedup(fast=True):
+    """Acceptance bench: the Fig. 12 fast sweep on the active-window
+    vmapped engine vs the dense oracle — wall clock, per-step cost, and the
+    FCT-slowdown agreement between the two.  Records PERF["fig12_sweep"]
+    for BENCH_netsim.json."""
+    import time
+
+    from repro.netsim import sweep, topology
+
+    topo = topology.sim_2tier()
+    arr = 2.5e-3 if fast else 10e-3
+    dur = arr * 4
+    cases = fig12_cases(fast)
+    schemes = ("ecmp", "seqbalance", "letflow", "conga", "drill")
+    traces = {c: _poisson(topo, c[0], c[1], arr) for c in cases}
+    n_steps = int(round(dur / 10e-6))
+    n_sims = len(cases) * len(schemes)
+
+    sweep.clear_cache()  # time cold compiles like the dense path pays them
+    t0 = time.time()
+    compact_stats, spill = {}, 0
+    results, _ = run_sim_jobs(topo, [traces[c] for c in cases], schemes, dur)
+    for scheme in schemes:
+        for c, (st, _) in zip(cases, results[scheme]):
+            compact_stats[(scheme, c)] = fct(st, traces[c], topo, 100e9)
+            spill = max(spill, st.spill_steps)
+    compact_wall = time.time() - t0
+
+    t0 = time.time()
+    dense_stats = {}
+    for scheme in schemes:
+        for c in cases:
+            st, _, _ = run_sim(topo, traces[c], scheme, dur, dense=True)
+            dense_stats[(scheme, c)] = fct(st, traces[c], topo, 100e9)
+    dense_wall = time.time() - t0
+
+    diffs = {}
+    for key in compact_stats:
+        for stat in ("avg_slowdown", "p99_slowdown"):
+            d = abs(compact_stats[key][stat] / dense_stats[key][stat] - 1) * 100
+            diffs[f"{key[0]}_{key[1][0]}_{int(key[1][1]*100)}_{stat}"] = d
+    max_diff = max(diffs.values())
+    speedup = dense_wall / compact_wall
+    emit("netsim_sweep_compact", compact_wall * 1e6 / n_sims,
+         f"wall_{compact_wall:.1f}s_{n_sims}sims_per_step_us_{compact_wall*1e6/(n_sims*n_steps):.1f}")
+    emit("netsim_sweep_dense", dense_wall * 1e6 / n_sims,
+         f"wall_{dense_wall:.1f}s_per_step_us_{dense_wall*1e6/(n_sims*n_steps):.1f}")
+    emit("netsim_sweep_speedup", 0.0,
+         f"{speedup:.1f}x_max_stat_diff_{max_diff:.3f}%_spill_{spill}")
+    PERF["fig12_sweep"] = dict(
+        fast=fast, n_sims=n_sims, n_steps=n_steps,
+        compact_wall_s=round(compact_wall, 2), dense_wall_s=round(dense_wall, 2),
+        speedup=round(speedup, 2),
+        per_step_us_compact=round(compact_wall * 1e6 / (n_sims * n_steps), 2),
+        per_step_us_dense=round(dense_wall * 1e6 / (n_sims * n_steps), 2),
+        max_stat_diff_pct=round(max_diff, 4), spill_steps=int(spill),
+        stat_diff_pct={k: round(v, 4) for k, v in diffs.items()},
+    )
 
 
 ALL = [
@@ -237,4 +318,5 @@ ALL = [
     bench_fig12_fct_2tier,
     bench_fig13_imbalance,
     bench_fig14_fct_3tier,
+    bench_netsim_speedup,
 ]

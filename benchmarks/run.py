@@ -1,12 +1,16 @@
 """Benchmark harness: one function per paper table/figure + §Perf benches.
 
 Prints ``name,us_per_call,derived`` CSV (DESIGN.md §7 maps names to paper
-artifacts).  ``--full`` switches to paper-scale simulation parameters;
-``--only <substr>`` filters benches.
+artifacts) and writes a machine-readable BENCH_netsim.json (CSV rows plus
+the netsim perf records from benchmarks/common.PERF: per-step µs, sweep
+wall-clock, compact-vs-dense speedup).  ``--full`` switches to paper-scale
+simulation parameters; ``--only <substr>`` filters benches; ``--json ''``
+disables the JSON dump.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -15,9 +19,11 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale runs")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default="BENCH_netsim.json",
+                    help="output path for the machine-readable record")
     args = ap.parse_args()
 
-    from benchmarks import paper_benches
+    from benchmarks import common, paper_benches
     from benchmarks.bench_collectives import bench_collectives
     from benchmarks.bench_kernels import bench_kernels
 
@@ -32,7 +38,19 @@ def main() -> None:
         except Exception as e:  # a failed bench must not hide the others
             print(f"{b.__name__},0.0,ERROR_{type(e).__name__}:_{str(e)[:120]}",
                   file=sys.stdout, flush=True)
-    print(f"# total_wall_s,{time.time()-t0:.1f},", flush=True)
+    wall = time.time() - t0
+    print(f"# total_wall_s,{wall:.1f},", flush=True)
+
+    if args.json:
+        record = dict(common.PERF)
+        record["total_wall_s"] = round(wall, 1)
+        record["rows"] = common.ROWS
+        try:
+            with open(args.json, "w") as f:
+                json.dump(record, f, indent=2)
+            print(f"# wrote {args.json}", flush=True)
+        except OSError as e:  # never lose a long bench run to a bad path
+            print(f"# could not write {args.json}: {e}", file=sys.stderr)
 
 
 if __name__ == "__main__":

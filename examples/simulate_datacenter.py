@@ -1,18 +1,24 @@
 """Simulate the paper's large-scale setup (8 leaves x 12 spines x 128
 hosts @100G) and compare SeqBalance against ECMP/LetFlow/CONGA/DRILL.
 
+Runs on the active-window vmapped engine (netsim/sweep.py) — all five
+schemes as concurrent sweep jobs; pass --dense for the O(F) oracle.
+
 Run: PYTHONPATH=src python examples/simulate_datacenter.py [--elephants]
 """
 import argparse
+import time
 
 import numpy as np
 
-from repro.netsim import engine, metrics, topology, workloads
+from repro.netsim import engine, metrics, sweep, topology, workloads
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--elephants", action="store_true",
                 help="AI-training traffic mode (few large flows)")
 ap.add_argument("--load", type=float, default=0.6)
+ap.add_argument("--dense", action="store_true",
+                help="use the dense O(F) oracle engine instead")
 args = ap.parse_args()
 
 topo = topology.sim_2tier()
@@ -24,11 +30,25 @@ trace = workloads.poisson_trace(workloads.TraceConfig(
 ))
 print(f"workload={wl} load={args.load} flows={int(trace.valid.sum())}")
 
-for scheme in ("ecmp", "letflow", "conga", "drill", "seqbalance"):
-    cfg = engine.SimConfig(scheme=scheme, duration_s=16e-3)
-    st, outs = engine.simulate(topo, cfg, trace)
+schemes = ("ecmp", "letflow", "conga", "drill", "seqbalance")
+t0 = time.time()
+if args.dense:
+    runs = {}
+    for scheme in schemes:
+        cfg = engine.SimConfig(scheme=scheme, duration_s=16e-3)
+        runs[scheme] = engine.simulate(topo, cfg, trace)
+else:
+    jobs = [(topo, engine.SimConfig(scheme=s, duration_s=16e-3), [trace])
+            for s in schemes]
+    out = sweep.run_jobs(jobs)
+    runs = {s: (r[0], o[0]) for s, (r, o) in zip(schemes, out)}
+wall = time.time() - t0
+
+for scheme in schemes:
+    st, outs = runs[scheme]
     s = metrics.fct_stats(st, trace, topo, 100e9)
     imb = metrics.throughput_imbalance(outs)
     print(f"{scheme:11s} avg_slowdown={s['avg_slowdown']:7.2f} "
           f"p99={s['p99_slowdown']:8.2f} completion={s['completion_rate']:.3f} "
           f"imbalance_median={np.median(imb) if len(imb) else -1:.3f}")
+print(f"engine={'dense' if args.dense else 'active-window'} wall={wall:.1f}s")

@@ -1,0 +1,11 @@
+#!/usr/bin/env bash
+# CI smoke: tier-1 test suite + one fast end-to-end paper bench.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q
+
+# bench_fig10 fast mode: exercises trace generation, the sweep runner, the
+# compact engine, and the metrics layer end to end in under a minute.
+python -m benchmarks.run --only fig10 --json /tmp/BENCH_smoke.json

@@ -21,6 +21,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _linkload_kernel(
@@ -106,3 +107,141 @@ def linkload(
         interpret=interpret,
     )(link_ids, rates, queue_p, cap_p)
     return load[:n_links], newq[:n_links], mark[:n_links]
+
+
+def _cascade_kernel(
+    lid_ref, rate_ref, queue_ref, cap_ref, qmask_ref,
+    arrival_ref, newq_ref, mark_ref, scales_ref, thr_ref, r_ref,
+    *, n_links_padded, hops, kmin, kmax, pmax, dt, qmax,
+):
+    """Fused hop cascade (netsim/dataplane.py).  Grid = (hops + 1, n_tiles),
+    hop-major: pass ``h`` accumulates hop-h offered load over all flow tiles
+    (one-hot matmul) into scales_ref[h], whose last tile converts it in place
+    to the hop's capacity scale.  Each pass first advances the running
+    per-flow rate (scratch ``r_ref``) by the PREVIOUS hop's scale — a second
+    one-hot matmul doubling as the gather — so no hop ever re-reads HBM.
+    The extra final pass (h == hops) applies the last scale to the rates
+    (-> thr) and fuses the queue + RED mark update."""
+    h = pl.program_id(0)
+    t = pl.program_id(1)
+    n_tiles = pl.num_programs(1)
+
+    lids = lid_ref[...]  # [block_n, hops] i32 (sentinel = dummy column)
+    bn = lids.shape[0]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (bn, n_links_padded), 1)
+    hop_iota = jax.lax.broadcasted_iota(jnp.int32, (bn, hops), 1)
+
+    @pl.when((h == 0) & (t == 0))
+    def _init():
+        arrival_ref[...] = jnp.zeros_like(arrival_ref)
+
+    # rate entering hop h = stored rate scaled by hop h-1 (one-hot gather)
+    hprev = jnp.maximum(h - 1, 0)
+    lid_prev = jnp.sum(jnp.where(hop_iota == hprev, lids, 0), axis=1)  # [bn]
+    srow = pl.load(scales_ref, (pl.dslice(hprev, 1), slice(None)))[0]
+    oh_prev = (iota == lid_prev[:, None]).astype(jnp.float32)
+    stored = pl.load(r_ref, (pl.dslice(t, 1), slice(None)))[0]
+    r = jnp.where(h == 0, rate_ref[...], stored * (oh_prev @ srow))
+    pl.store(r_ref, (pl.dslice(t, 1), slice(None)), r[None])
+
+    @pl.when(h < hops)
+    def _accumulate():
+        lid_h = jnp.sum(jnp.where(hop_iota == h, lids, 0), axis=1)
+        oh = (iota == lid_h[:, None]).astype(jnp.float32)
+        acc = pl.load(scales_ref, (pl.dslice(h, 1), slice(None)))[0]
+        acc = jnp.where(t == 0, 0.0, acc)
+        pl.store(scales_ref, (pl.dslice(h, 1), slice(None)), (acc + r @ oh)[None])
+
+    @pl.when((h < hops) & (t == n_tiles - 1))
+    def _finalize_hop():
+        load = pl.load(scales_ref, (pl.dslice(h, 1), slice(None)))[0]
+        arrival_ref[...] += load
+        scale = jnp.minimum(1.0, cap_ref[...] / jnp.maximum(load, 1.0))
+        pl.store(scales_ref, (pl.dslice(h, 1), slice(None)), scale[None])
+
+    @pl.when(h == hops)
+    def _write_thr():
+        thr_ref[...] = r
+
+    @pl.when((h == hops) & (t == n_tiles - 1))
+    def _finalize():
+        arr = arrival_ref[...]
+        newq = jnp.clip(queue_ref[...] + (arr - cap_ref[...]) * dt / 8.0, 0.0, qmax)
+        newq = newq * qmask_ref[...]
+        ramp = (newq - kmin) / (kmax - kmin)
+        mark = jnp.where(newq < kmin, 0.0, jnp.where(newq > kmax, 1.0, ramp * pmax))
+        newq_ref[...] = newq
+        mark_ref[...] = mark
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "n_links", "kmin", "kmax", "pmax", "dt", "qmax_bytes", "block_n", "interpret"
+    ),
+)
+def linkload_cascade(
+    link_ids: jax.Array,  # i32[n, hops]  (-1 = no hop)
+    rates: jax.Array,  # f32[n]
+    queue: jax.Array,  # f32[n_links]
+    capacity: jax.Array,  # f32[n_links]
+    queue_mask: jax.Array,  # f32[n_links]
+    *,
+    n_links: int,
+    kmin: float = 400e3,
+    kmax: float = 1600e3,
+    pmax: float = 0.2,
+    dt: float = 10e-6,
+    qmax_bytes: float = 8e6,
+    block_n: int = 512,
+    interpret: bool = False,
+):
+    """Fused dataplane step: (arrival, new_queue, mark, thr) — the whole
+    offered-load -> queue -> RED/ECN pipeline of the fluid simulator in one
+    kernel call.  Oracle: kernels/ref.py::linkload_cascade_ref."""
+    n, hops = link_ids.shape
+    dummy = n_links  # -1 hops land on the first padded column
+    lid = jnp.where(link_ids >= 0, link_ids, dummy).astype(jnp.int32)
+    pad_n = (-n) % block_n
+    if pad_n:
+        lid = jnp.pad(lid, ((0, pad_n), (0, 0)), constant_values=dummy)
+        rates = jnp.pad(rates, (0, pad_n))
+    L_pad = ((n_links + 1 + 127) // 128) * 128
+    queue_p = jnp.pad(queue, (0, L_pad - n_links))
+    cap_p = jnp.pad(capacity[:n_links], (0, L_pad - n_links), constant_values=1e30)
+    qmask_p = jnp.pad(queue_mask[:n_links], (0, L_pad - n_links))
+
+    n_tiles = (n + pad_n) // block_n
+    grid = (hops + 1, n_tiles)
+    arrival, newq, mark, scales, thr = pl.pallas_call(
+        functools.partial(
+            _cascade_kernel,
+            n_links_padded=L_pad, hops=hops, kmin=kmin, kmax=kmax, pmax=pmax,
+            dt=dt, qmax=qmax_bytes,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, hops), lambda h, t: (t, 0)),
+            pl.BlockSpec((block_n,), lambda h, t: (t,)),
+            pl.BlockSpec((L_pad,), lambda h, t: (0,)),
+            pl.BlockSpec((L_pad,), lambda h, t: (0,)),
+            pl.BlockSpec((L_pad,), lambda h, t: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((L_pad,), lambda h, t: (0,)),
+            pl.BlockSpec((L_pad,), lambda h, t: (0,)),
+            pl.BlockSpec((L_pad,), lambda h, t: (0,)),
+            pl.BlockSpec((hops, L_pad), lambda h, t: (0, 0)),
+            pl.BlockSpec((block_n,), lambda h, t: (t,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((L_pad,), jnp.float32),
+            jax.ShapeDtypeStruct((L_pad,), jnp.float32),
+            jax.ShapeDtypeStruct((L_pad,), jnp.float32),
+            jax.ShapeDtypeStruct((hops, L_pad), jnp.float32),
+            jax.ShapeDtypeStruct((n + pad_n,), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((n_tiles, block_n), jnp.float32)],
+        interpret=interpret,
+    )(lid, rates, queue_p, cap_p, qmask_p)
+    return arrival[:n_links], newq[:n_links], mark[:n_links], thr[:n]

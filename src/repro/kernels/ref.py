@@ -34,6 +34,41 @@ def flash_attention_ref(
     return out.reshape(B, S, H, hd).astype(q.dtype)
 
 
+def linkload_cascade_ref(
+    link_ids: jax.Array,  # i32[n, hops]  (-1 = no hop)
+    rates: jax.Array,  # f32[n]
+    n_links: int,
+    kmin: float,
+    kmax: float,
+    pmax: float,
+    queue: jax.Array,  # f32[n_links]
+    capacity: jax.Array,  # f32[n_links]
+    queue_mask: jax.Array,  # f32[n_links] 0 on queueless (host_tx) links
+    dt: float,
+    qmax_bytes: float = 8e6,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """(arrival, new_queue, mark_prob, thr) — the full hop-cascaded dataplane
+    step (netsim/dataplane.py §9): hop h's arrivals are the upstream-scaled
+    rates, queues integrate total arrival, RED marks on the new queue."""
+    hops = link_ids.shape[1]
+    cap_ext = jnp.concatenate([capacity, jnp.full((1,), 1e30, jnp.float32)])
+    lid = jnp.where(link_ids >= 0, link_ids, n_links)
+    r = rates
+    arrival = jnp.zeros((n_links + 1,), jnp.float32)
+    for h in range(hops):
+        lh = lid[:, h]
+        load_h = jax.ops.segment_sum(r, lh, num_segments=n_links + 1)
+        arrival = arrival + load_h.at[n_links].set(0.0)
+        s_h = jnp.minimum(1.0, cap_ext[lh] / jnp.maximum(load_h[lh], 1.0))
+        r = r * jnp.where(link_ids[:, h] >= 0, s_h, 1.0)
+    arrival = arrival[:n_links]
+    new_queue = jnp.clip(queue + (arrival - capacity) * dt / 8.0, 0.0, qmax_bytes)
+    new_queue = new_queue * queue_mask
+    ramp = (new_queue - kmin) / (kmax - kmin)
+    mark = jnp.where(new_queue < kmin, 0.0, jnp.where(new_queue > kmax, 1.0, ramp * pmax))
+    return arrival, new_queue, mark.astype(jnp.float32), r
+
+
 def linkload_ref(
     link_ids: jax.Array,  # i32[n, hops]  (-1 = no link)
     rates: jax.Array,  # f32[n]

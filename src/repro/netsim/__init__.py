@@ -1,4 +1,15 @@
-"""Fluid flow-level datacenter network simulator (the paper's NS3 stand-in)."""
-from repro.netsim import dcqcn, engine, metrics, topology, workloads
+"""Fluid flow-level datacenter network simulator (the paper's NS3 stand-in).
 
-__all__ = ["dcqcn", "engine", "metrics", "topology", "workloads"]
+Two engines share one physics (netsim/dataplane.py): ``engine`` is the
+dense O(F)-per-step oracle, ``compact`` the active-window O(W) production
+path, and ``sweep`` batches traces over it under a single vmapped compile
+(DESIGN.md §9).
+"""
+from repro.netsim import (
+    compact, dataplane, dcqcn, engine, metrics, sweep, topology, workloads,
+)
+
+__all__ = [
+    "compact", "dataplane", "dcqcn", "engine", "metrics", "sweep",
+    "topology", "workloads",
+]

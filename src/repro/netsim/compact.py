@@ -1,0 +1,453 @@
+"""Active-window compacted fluid simulator (DESIGN.md §9).
+
+The dense engine (netsim/engine.py) does O(F) work per ``dt`` step over all
+flows in the trace — but at any instant only a small working set is in
+flight (most flows already finished or not yet arrived).  This engine sorts
+flows by arrival and carries a compact ``[W, N]`` working set of *slots*:
+
+  * admit   — each step, flows whose arrival time has passed are gathered
+    into free slots in arrival order (``searchsorted`` on the sorted arrival
+    vector gives the arrived count; free slots are ranked by cumsum).
+  * run     — the per-step physics (path choice, DCQCN, hop cascade, ECN)
+    is byte-identical to the dense engine but over W slots, via the shared
+    netsim/dataplane.py pipeline.
+  * finish  — completed slots scatter their finish time into a global
+    ``[F]`` vector (scatter-min, drop-mode for empty slots) and free up.
+
+W is a precomputed max-concurrency bound from the trace
+(``max_concurrency_bound``), padded up.  If the bound is ever exceeded the
+engine does not lose flows: arrivals queue at the NIC and admit as slots
+free (``spill_steps`` in the result counts the steps where that happened,
+so callers can verify the bound held — it should be 0 for results that
+must match the dense oracle bit-for-bit-ish).
+
+The dense engine stays available as the correctness oracle
+(``benchmarks/common.run_sim(dense=True)``); equivalence is asserted in
+tests/test_netsim_compact.py and recorded per-sweep in BENCH_netsim.json.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines, congestion_table as ctab, hashing, routing
+from repro.netsim import dataplane, dcqcn as dcqcn_mod
+from repro.netsim.engine import (
+    DONE_EPS_BYTES, SimConfig, StepOutputs, flow_constants, line_rate_of,
+)
+from repro.netsim.topology import Topology
+from repro.netsim.workloads import Trace
+
+
+class CompactState(NamedTuple):
+    slot_fid: jax.Array  # i32[W] sorted-flow index; F_pad = empty sentinel
+    remaining: jax.Array  # f32[W, N]
+    path: jax.Array  # i32[W, N]
+    sub_done: jax.Array  # bool[W, N]
+    cc: dcqcn_mod.DCQCNState  # [W, N]
+    cqe_bitmap: jax.Array  # u32[W]
+    admitted: jax.Array  # i32 — flows admitted so far (prefix of sorted order)
+    finish: jax.Array  # f32[F_pad] global (+inf until CQE)
+    table: ctab.CongestionTable  # [n_leaf, n_paths]
+    queue: jax.Array  # f32[n_links + 1]
+    cnp_pkts: jax.Array  # f32 scalar
+    spill_steps: jax.Array  # i32 — steps where an arrived flow found no slot
+    step: jax.Array  # i32
+
+
+class CompactResult(NamedTuple):
+    """Duck-types the SimState fields the metrics layer reads."""
+
+    finish: np.ndarray  # f32[F] original trace order
+    cnp_pkts: np.ndarray  # f32 scalar
+    spill_steps: int
+    window_slots: int = 0  # W the (final) run used
+
+
+def max_concurrency_bound(
+    sizes: np.ndarray,
+    arrivals: np.ndarray,
+    valid: np.ndarray,
+    line_rate: float,
+    *,
+    slack_slowdown: float = 12.0,
+    slack_s: float = 150e-6,
+    safety: float = 1.2,
+) -> int:
+    """Estimated bound on concurrently-active flows: assume every flow lives
+    ``slack_slowdown`` x its line-rate serialization plus ``slack_s`` of
+    fixed queueing/RTT headroom, then take the max interval overlap.
+
+    This is a heuristic, not a guarantee — the engine reports
+    ``spill_steps > 0`` when it was exceeded, and netsim/sweep.py reruns
+    with a doubled window in that case (the spilled run stays physically
+    sensible — admission is just delayed — but only a spill-free run matches
+    the dense oracle exactly)."""
+    a = np.asarray(arrivals, np.float64)[np.asarray(valid, bool)]
+    s = np.asarray(sizes, np.float64)[np.asarray(valid, bool)]
+    if a.size == 0:
+        return 64
+    order = np.argsort(a, kind="stable")
+    a = a[order]
+    end = np.sort(a + s[order] * 8.0 / line_rate * slack_slowdown + slack_s)
+    # flows started minus flows (optimistically) ended at each arrival
+    started = np.arange(1, a.size + 1)
+    ended = np.searchsorted(end, a, side="left")
+    conc = int((started - ended).max())
+    return int(conc * safety) + 64
+
+
+def max_admits_per_step(arrivals: np.ndarray, valid: np.ndarray, dt: float) -> int:
+    """Exact peak number of arrivals in any one ``dt`` step (the admission
+    lane width A: per-step path selection runs on [A], not [W])."""
+    a = np.asarray(arrivals, np.float64)[np.asarray(valid, bool)]
+    if a.size == 0:
+        return 1
+    steps = np.ceil(a / dt).astype(np.int64)
+    return int(np.bincount(steps - steps.min()).max())
+
+
+def init_compact_state(
+    topo: Topology, cfg: SimConfig, W: int, F_pad: int,
+    finish0: jax.Array | None = None,
+) -> CompactState:
+    """Fresh all-slots-empty state.  ``finish0`` (f32[F_pad] of +inf) may be
+    built OUTSIDE the jitted run and donated — it is the one state buffer
+    large enough to matter, and it aliases the finish output exactly."""
+    N = cfg.n_sub
+    if finish0 is None:
+        finish0 = jnp.full((F_pad,), jnp.inf, jnp.float32)
+    return CompactState(
+        slot_fid=jnp.full((W,), F_pad, jnp.int32),
+        remaining=jnp.zeros((W, N), jnp.float32),
+        path=jnp.full((W, N), -1, jnp.int32),
+        sub_done=jnp.zeros((W, N), bool),
+        cc=dcqcn_mod.init_state((W, N), line_rate_of(topo)),
+        cqe_bitmap=jnp.zeros((W,), jnp.uint32),
+        admitted=jnp.zeros((), jnp.int32),
+        finish=finish0,
+        table=ctab.CongestionTable.create(topo.n_leaf, topo.n_paths),
+        queue=jnp.zeros((topo.n_links + 1,), jnp.float32),
+        cnp_pkts=jnp.zeros((), jnp.float32),
+        spill_steps=jnp.zeros((), jnp.int32),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def build_compact_sim(topo: Topology, cfg: SimConfig, trace_arrays, W: int, F_pad: int,
+                      A: int = 256):
+    """trace_arrays = (sizes, arrivals, src, dst, fid, valid), SORTED by
+    arrival (invalid flows last, arrival=+inf), padded to F_pad.
+    ``A`` is the admission lane width: at most A flows admit per step, and
+    admission-time work (path selection, slot resets) runs on [A]-shaped
+    rank arrays rather than the full [W] window.
+    Returns (init_state, step_fn)."""
+    sizes, arrivals, src, dst, fid, valid = (jnp.asarray(a) for a in trace_arrays)
+    N = cfg.n_sub
+    P = topo.n_paths
+    nl = topo.n_links
+
+    fc = flow_constants(topo, cfg, sizes, src, dst, fid)
+    line_rate = line_rate_of(topo)
+    qmask = dataplane.queue_mask_for(topo)
+    dparams = cfg.dcqcn
+
+    if cfg.scheme in ("conga", "drill"):
+        assert topo.kind == "leaf_spine", f"{cfg.scheme} is 2-tier only (paper §IV.B)"
+
+    def init_state() -> CompactState:
+        return init_compact_state(topo, cfg, W, F_pad)
+
+    full_cqe = (jnp.uint32(1) << jnp.uint32(N)) - jnp.uint32(1)
+
+    def step_fn(state: CompactState, _=None):
+        t = state.step.astype(jnp.float32) * cfg.dt
+        occ_prev = state.slot_fid < F_pad
+
+        # ---------------- admission (gather-on-admit) ----------------
+        n_arr = jnp.searchsorted(arrivals, t, side="right").astype(jnp.int32)
+        backlog = n_arr - state.admitted
+        free = ~occ_prev
+        free_rank = jnp.cumsum(free) - 1  # i32[W]
+        m = jnp.minimum(jnp.minimum(backlog, free.sum()), A)
+        newly = free & (free_rank < m)
+        slot_fid = jnp.where(newly, state.admitted + free_rank, state.slot_fid)
+        occupied = slot_fid < F_pad
+        fidw = jnp.minimum(slot_fid, F_pad - 1)  # clamped gather index
+
+        # admission lane: rank k in [0, A) takes flow admitted+k and lands
+        # in the k-th free slot.  All admission-time work happens on these
+        # [A]-shaped arrays and scatters into the [W] window (mode="drop"
+        # discards ranks beyond m via the W sentinel).
+        ranks = jnp.arange(A, dtype=jnp.int32)
+        rank_fid = jnp.minimum(state.admitted + ranks, F_pad - 1)  # [A]
+        slot_of_rank = jnp.full((A,), W, jnp.int32).at[
+            jnp.where(newly, free_rank, A)
+        ].set(jnp.arange(W, dtype=jnp.int32), mode="drop")
+
+        # per-flow constants needed by the per-step physics (O(W) gathers)
+        src_w, dst_w = src[fidw], dst[fidw]
+        sleaf, dleaf = fc.src_leaf[fidw], fc.dst_leaf[fidw]
+        salt_w = fc.sub_salt[fidw]  # [W, N]
+
+        # reset admitted slots (rank -> slot scatters)
+        remaining = state.remaining.at[slot_of_rank].set(
+            fc.sub_sizes[rank_fid], mode="drop")
+        sub_done = state.sub_done.at[slot_of_rank].set(False, mode="drop")
+        cqe_bitmap = state.cqe_bitmap.at[slot_of_rank].set(
+            jnp.uint32(0), mode="drop")
+        cc = jax.tree.map(
+            lambda old, init: old.at[slot_of_rank].set(init, mode="drop"),
+            state.cc, dcqcn_mod.init_state((A, N), line_rate),
+        )
+
+        # ---------------- path (re)assignment (dense-engine logic) ------
+        # new flows route on the [A] admission lane; only flowlet schemes
+        # touch every slot (their reroute check is inherently per-step)
+        path = state.path
+        if cfg.scheme == "seqbalance":
+            inact = ctab.inactive_matrix(state.table, t)  # [L, P]
+            stale = inact.sum(-1, keepdims=True) > (P // 2)
+            inact = jnp.where(stale, False, inact)
+            rows = inact[fc.src_leaf[rank_fid]][:, None, :]  # [A, 1, P]
+            rows = jnp.broadcast_to(rows, (A, N, P))
+            s5_a = tuple(a[rank_fid] for a in fc.s5)  # each [A, N]
+            p_new = routing.select_paths(*s5_a, rows, P)  # [A, N]
+            path = path.at[slot_of_rank].set(p_new, mode="drop")
+        elif cfg.scheme == "ecmp":
+            f5_a = tuple(a[rank_fid] for a in fc.f5)  # each [A]
+            p_new = routing.ecmp_paths(*f5_a, P)[:, None]  # [A, 1]
+            path = path.at[slot_of_rank].set(p_new, mode="drop")
+        elif cfg.scheme in ("letflow", "conga"):
+            rng = hashing.fmix32(
+                fid[fidw] ^ state.step.astype(jnp.uint32) * jnp.uint32(0x85EBCA77)
+            )
+            gap = baselines.flowlet_gap_occurs(
+                cc.rc[:, 0], dparams.mtu_bytes, cfg.flowlet_timeout
+            )
+            if cfg.scheme == "letflow":
+                p_re = baselines.letflow_paths(path[:, 0], gap, rng, P)
+            else:
+                pq = dataplane.path_queue_2tier(topo, state.queue, sleaf, dleaf)
+                p_re = baselines.conga_paths(path[:, 0], gap, pq)
+            p_next = jnp.where(occ_prev, p_re, path[:, 0])[:, None]  # [W, 1]
+            f5_a = tuple(a[rank_fid] for a in fc.f5)
+            p_init = routing.ecmp_paths(*f5_a, P)[:, None]  # [A, 1]
+            path = p_next.at[slot_of_rank].set(p_init, mode="drop")
+        else:  # drill: nominal path 0; real split via weights below
+            path = path.at[slot_of_rank].set(0, mode="drop")
+
+        active = occupied[:, None] & ~sub_done
+        rc = jnp.where(
+            active, jnp.minimum(cc.rc, remaining * 8.0 / cfg.dt), 0.0
+        )  # [W, N]
+
+        # ---------------- dataplane (shared with dense engine) ----------
+        links = topo.subflow_links(src_w[:, None], dst_w[:, None], path)  # [W,N,6]
+        if cfg.scheme == "drill":
+            arrival, thr, w_spray, pq = dataplane.drill_spray(
+                topo, state.queue, rc[:, 0], src_w, dst_w, sleaf, dleaf,
+                active[:, 0:1], cfg.drill_q0,
+            )
+            new_queue, p_mark = dataplane.integrate_queue(
+                state.queue, arrival, topo.capacity, qmask, dparams,
+                dt=cfg.dt, qmax_bytes=cfg.qmax_bytes, n_links=nl,
+            )
+            p_sub, p_sub_fabric = dataplane.drill_mark_probs(
+                topo, p_mark, w_spray, sleaf, dleaf, dst_w
+            )
+            thr = thr * dataplane.drill_gbn_factor(
+                topo, pq, w_spray, rc[:, 0], mtu_bytes=dparams.mtu_bytes,
+                jitter_mtus=cfg.drill_jitter_mtus, window_pkts=cfg.gbn_window_pkts,
+            )
+            thr = thr[:, None]  # [W, 1]
+        else:
+            arrival, new_queue, p_mark, thr = dataplane.cascade(
+                links, rc, state.queue, topo.capacity, qmask,
+                n_links=nl, kmin=dparams.kmin_bytes, kmax=dparams.kmax_bytes,
+                pmax=dparams.pmax, dt=cfg.dt, qmax_bytes=cfg.qmax_bytes,
+                backend=cfg.dataplane,
+            )
+            p_sub, p_sub_fabric = dataplane.subflow_mark_probs(links, p_mark, nl)
+
+        # ---------------- transfer progress & CQE ----------------
+        delivered = thr * cfg.dt / 8.0  # bytes
+        new_remaining = jnp.maximum(remaining - jnp.where(active, delivered, 0.0), 0.0)
+        sub_done = occupied[:, None] & (new_remaining <= DONE_EPS_BYTES)
+        bits = (sub_done.astype(jnp.uint32) << jnp.arange(N, dtype=jnp.uint32)).sum(
+            axis=-1, dtype=jnp.uint32
+        )
+        cqe_bitmap = cqe_bitmap | bits
+        all_done = ((cqe_bitmap & full_cqe) == full_cqe) & occupied
+        # scatter-on-finish: empty slots carry the F_pad sentinel -> dropped
+        finish = state.finish.at[slot_fid].min(
+            jnp.where(all_done, t + cfg.dt, jnp.inf), mode="drop"
+        )
+
+        # ---------------- DCQCN ----------------
+        flow_salt = salt_w if cfg.scheme == "seqbalance" else salt_w[:, :1]
+        flow_salt = jnp.broadcast_to(flow_salt, (W, N))
+        cc, _ = dcqcn_mod.step(
+            cc, p_sub, active, cfg.dt, line_rate, dparams, state.step, flow_salt
+        )
+
+        # ---------------- SeqBalance Congestion Packets ----------------
+        table = state.table
+        pkts = jnp.where(active, rc * cfg.dt / (8.0 * dparams.mtu_bytes), 0.0)
+        exp_cong_pkts = jnp.sum(pkts * p_sub_fabric)
+        if cfg.scheme == "seqbalance":
+            intensity = jnp.zeros((topo.n_leaf, P), jnp.float32)
+            idx_leaf = jnp.broadcast_to(sleaf[:, None], (W, N)).reshape(-1)
+            idx_path = jnp.clip(path, 0, P - 1).reshape(-1)
+            intensity = intensity.at[idx_leaf, idx_path].add(
+                (pkts * p_sub_fabric).reshape(-1)
+            )
+            dense_mask = intensity >= cfg.cong_threshold_pkts
+            table = ctab.mark_congested_dense(table, dense_mask, t, cfg.phi)
+
+        new_state = CompactState(
+            slot_fid=jnp.where(all_done, F_pad, slot_fid),  # free finished slots
+            remaining=new_remaining,
+            path=path,
+            sub_done=sub_done,
+            cc=cc,
+            cqe_bitmap=cqe_bitmap,
+            admitted=state.admitted + m,
+            finish=finish,
+            table=table,
+            queue=new_queue,
+            cnp_pkts=state.cnp_pkts + exp_cong_pkts,
+            spill_steps=state.spill_steps + (backlog > m).astype(jnp.int32),
+            step=state.step + 1,
+        )
+        out = StepOutputs(
+            uplink_load=arrival[jnp.asarray(topo.uplink_ids)],
+            goodput_total=jnp.sum(jnp.where(active, thr, 0.0)),
+            cnp_rate=exp_cong_pkts,
+            max_queue=jnp.max(new_queue[:nl]),
+        )
+        return new_state, out
+
+    return init_state, step_fn
+
+
+def run_core(topo: Topology, cfg: SimConfig, W: int, F_pad: int, A: int,
+             n_steps: int, trace_arrays, finish0: jax.Array):
+    """Jit-friendly core: sorted/padded trace arrays + a donatable +inf
+    finish buffer in, (finish[F_pad] in sorted order, cnp_pkts, spill_steps,
+    per-step outputs) out.  Wrapped and cached by netsim/sweep.py;
+    vmap-able over a leading batch axis of (trace_arrays, finish0).
+
+    Runs as a while_loop with EARLY EXIT: once every flow has been admitted
+    and finished and the queues have fully drained, the remaining steps of
+    the horizon are exact no-ops (zero offered load, zero queues — also in
+    the dense engine), so they are skipped and the preallocated per-step
+    outputs keep their zeros.  Typical paper sweeps (arrivals stop at 1/4
+    of the horizon) skip 30-50 % of steps this way."""
+    _, step_fn = build_compact_sim(topo, cfg, trace_arrays, W, F_pad, A)
+    init = init_compact_state(topo, cfg, W, F_pad, finish0)
+    n_valid = jnp.sum(jnp.asarray(trace_arrays[5]).astype(jnp.int32))
+    nl = topo.n_links
+    uplink_shape = np.asarray(topo.uplink_ids).shape
+    outs0 = StepOutputs(
+        uplink_load=jnp.zeros((n_steps,) + uplink_shape, jnp.float32),
+        goodput_total=jnp.zeros((n_steps,), jnp.float32),
+        cnp_rate=jnp.zeros((n_steps,), jnp.float32),
+        max_queue=jnp.zeros((n_steps,), jnp.float32),
+    )
+
+    def cond(carry):
+        st, _ = carry
+        alive = (
+            (st.admitted < n_valid)
+            | jnp.any(st.slot_fid < F_pad)
+            | (jnp.max(st.queue[:nl]) > 0.0)
+        )
+        return (st.step < n_steps) & alive
+
+    def body(carry):
+        st, outs = carry
+        k = st.step
+        st2, o = step_fn(st)
+        outs2 = StepOutputs(*(a.at[k].set(v) for a, v in zip(outs, o)))
+        return st2, outs2
+
+    final, outs = jax.lax.while_loop(cond, body, (init, outs0))
+    return final.finish, final.cnp_pkts, final.spill_steps, outs
+
+
+def sort_trace(trace: Trace) -> tuple[tuple, np.ndarray, int]:
+    """Sort a trace by arrival (invalid flows last at +inf).  Returns
+    (sorted arrays tuple, inverse permutation, n_flows)."""
+    valid = np.asarray(trace.valid, bool)
+    arr = np.asarray(trace.arrivals, np.float32).copy()
+    arr[~valid] = np.inf
+    order = np.argsort(arr, kind="stable")
+    inv = np.empty_like(order)
+    inv[order] = np.arange(order.size)
+    arrays = (
+        np.asarray(trace.sizes, np.float32)[order],
+        arr[order],
+        np.asarray(trace.src, np.int32)[order],
+        np.asarray(trace.dst, np.int32)[order],
+        np.asarray(trace.flow_id, np.uint32)[order],
+        valid[order],
+    )
+    return arrays, inv, order.size
+
+
+def pad_trace_arrays(arrays: tuple, F_pad: int) -> tuple:
+    sizes, arr, src, dst, fid, valid = arrays
+    pad = F_pad - sizes.shape[0]
+    assert pad >= 0, (sizes.shape[0], F_pad)
+    if pad == 0:
+        return arrays
+    return (
+        np.concatenate([sizes, np.ones(pad, np.float32)]),
+        np.concatenate([arr, np.full(pad, np.inf, np.float32)]),
+        np.concatenate([src, np.zeros(pad, np.int32)]),
+        np.concatenate([dst, np.zeros(pad, np.int32)]),
+        np.concatenate([fid, np.zeros(pad, np.uint32)]),
+        np.concatenate([valid, np.zeros(pad, bool)]),
+    )
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3, 4, 5), donate_argnums=(7,))
+def _run_single(topo, cfg, W, F_pad, A, n_steps, trace_arrays, finish0):
+    return run_core(topo, cfg, W, F_pad, A, n_steps, trace_arrays, finish0)
+
+
+def simulate_compact(
+    topo: Topology, cfg: SimConfig, trace: Trace, *, window_slots: int | None = None
+) -> tuple[CompactResult, StepOutputs]:
+    """One-shot compact run (single trace; for sweeps use netsim/sweep.py).
+
+    Drop-in for ``engine.simulate`` where only finish times / CNP counts /
+    per-step outputs are consumed."""
+    arrays, inv, F = sort_trace(trace)
+    F_pad = max(F, 1)
+    if window_slots is None:
+        line_rate = float(np.asarray(line_rate_of(topo)))
+        bound = max_concurrency_bound(arrays[0], arrays[1], arrays[5], line_rate)
+        W = int(min(((bound + 127) // 128) * 128, F_pad))
+        W = max(W, min(128, F_pad))
+    else:  # explicit window: honor it exactly (tests probe spill behavior)
+        W = max(8, min(int(window_slots), F_pad))
+    A = min(((max_admits_per_step(arrays[1], arrays[5], cfg.dt) + 31) // 32) * 32,
+            F_pad)
+    n_steps = int(round(cfg.duration_s / cfg.dt))
+    finish, cnp, spill, outs = _run_single(
+        topo, cfg, W, F_pad, A, n_steps, tuple(jnp.asarray(a) for a in arrays),
+        jnp.full((F_pad,), jnp.inf, jnp.float32),
+    )
+    res = CompactResult(
+        finish=np.asarray(finish)[:F][inv],
+        cnp_pkts=np.asarray(cnp),
+        spill_steps=int(spill),
+        window_slots=W,
+    )
+    return res, outs

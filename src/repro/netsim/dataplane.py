@@ -1,0 +1,277 @@
+"""Fused switch dataplane: offered-load -> queue -> RED/ECN-mark pipeline.
+
+This is the per-step work of every ToR/spine in the fluid simulator
+(DESIGN.md §8/§9), extracted from ``engine.step_fn`` so that one module owns
+the hop cascade and both engines (dense oracle and active-window compact)
+share bit-identical math:
+
+  hop h arrivals are the UPSTREAM-scaled rates (NIC serializes first, then
+  fabric), so for h = 0..H-1:
+      load_h[l]  = sum of sub-flow rates (scaled by hops < h) entering l
+      scale_h[l] = min(1, cap[l] / load_h[l])
+      r         <- r * scale_h[lid_h]
+  arrival[l]   = sum_h load_h[l]
+  queue[l]    <- clip(queue + (arrival - cap) * dt/8, 0, qmax) * queue_mask
+  p_mark[l]    = RED ramp on queue (kmin/kmax/pmax)
+
+Backends
+  * ``xla``    — ``jax.ops.segment_sum`` per hop (the original engine loop;
+    also the correctness oracle, mirrored in ``kernels/ref.py``).
+  * ``pallas`` — one fused ``kernels/linkload.py::linkload_cascade`` call:
+    the scatter-adds become one-hot matmuls on the MXU, the cascade walks
+    hops in the grid, and queue/mark fuse into the final grid step.
+  * ``pallas_interpret`` — the same kernel interpreted on CPU (tests).
+  * ``auto``   — pallas on TPU, xla everywhere else.
+
+DRILL's per-packet spray does not fit the per-path cascade (it splits one
+sub-flow over ALL paths by queue-depth weights), so its 2-tier dataplane
+lives here too (``drill_spray``) and is shared by both engines.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.netsim.topology import Topology
+
+_BACKENDS = ("auto", "xla", "pallas", "pallas_interpret")
+
+
+def resolve_backend(backend: str) -> str:
+    assert backend in _BACKENDS, backend
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    return backend
+
+
+def cascade(
+    links: jax.Array,  # i32[..., H] link ids, -1 = hop absent
+    rates: jax.Array,  # f32[...] offered rate per sub-flow (bps)
+    queue: jax.Array,  # f32[n_links + 1] current queue bytes (sentinel last)
+    capacity: jax.Array,  # f32[n_links + 1] bps (sentinel = 1e30)
+    queue_mask: jax.Array,  # f32[n_links + 1] 0 on queueless links (host_tx)
+    *,
+    n_links: int,
+    kmin: float,
+    kmax: float,
+    pmax: float,
+    dt: float,
+    qmax_bytes: float,
+    backend: str = "auto",
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Returns (arrival[n_links+1], new_queue[n_links+1], p_mark[n_links+1],
+    thr[...]) — thr is the delivered rate after all hop scales."""
+    backend = resolve_backend(backend)
+    if backend == "xla":
+        return _cascade_xla(
+            links, rates, queue, capacity, queue_mask,
+            n_links=n_links, kmin=kmin, kmax=kmax, pmax=pmax, dt=dt,
+            qmax_bytes=qmax_bytes,
+        )
+    from repro.kernels import linkload as ll
+
+    shape = rates.shape
+    hops = links.shape[-1]
+    flat_links = links.reshape(-1, hops)
+    flat_rates = rates.reshape(-1)
+    arrival_l, newq_l, mark_l, thr = ll.linkload_cascade(
+        flat_links, flat_rates, queue[:n_links], capacity[:n_links],
+        queue_mask[:n_links], n_links=n_links, kmin=kmin, kmax=kmax,
+        pmax=pmax, dt=dt, qmax_bytes=qmax_bytes,
+        interpret=(backend == "pallas_interpret"),
+    )
+    zero = jnp.zeros((1,), jnp.float32)
+    arrival = jnp.concatenate([arrival_l, zero])
+    new_queue = jnp.concatenate([newq_l, zero])
+    p_mark = jnp.concatenate([mark_l, zero])
+    return arrival, new_queue, p_mark, thr.reshape(shape)
+
+
+def _cascade_xla(links, rates, queue, capacity, queue_mask, *, n_links,
+                 kmin, kmax, pmax, dt, qmax_bytes):
+    nl = n_links
+    hops = links.shape[-1]
+    flat_links = links.reshape(-1, hops)
+    lid = jnp.where(flat_links >= 0, flat_links, nl)
+    r = rates.reshape(-1)
+    arrival = jnp.zeros((nl + 1,), jnp.float32)
+    for h in range(hops):
+        lh = lid[:, h]
+        load_h = jax.ops.segment_sum(r, lh, num_segments=nl + 1)
+        arrival = arrival + load_h.at[nl].set(0.0)
+        # per-LINK scale, then one gather — the sentinel link has cap 1e30
+        # so absent hops land on scale exactly 1.0 (no where() needed)
+        scale_h = jnp.minimum(1.0, capacity / jnp.maximum(load_h, 1.0))
+        r = r * scale_h[lh]
+    new_queue = jnp.clip(
+        queue + (arrival - capacity) * dt / 8.0, 0.0, qmax_bytes
+    ) * queue_mask
+    ramp = (new_queue - kmin) / (kmax - kmin)
+    p_mark = jnp.where(
+        new_queue < kmin, 0.0, jnp.where(new_queue > kmax, 1.0, ramp * pmax)
+    ).astype(jnp.float32)
+    p_mark = p_mark.at[nl].set(0.0)
+    return arrival, new_queue, p_mark, r.reshape(rates.shape)
+
+
+def subflow_mark_probs(
+    links: jax.Array,  # i32[..., H]
+    p_mark: jax.Array,  # f32[n_links + 1]
+    n_links: int,
+) -> tuple[jax.Array, jax.Array]:
+    """(p_sub, p_sub_fabric): probability a packet of the sub-flow is marked
+    on any hop / on any FABRIC hop (hops 1..H-2 — the marks the destination
+    ToR mirrors back as Congestion Packets)."""
+    lid = jnp.where(links >= 0, links, n_links)
+    hop_mark = jnp.where(links >= 0, p_mark[lid], 0.0)
+    p_sub = 1.0 - jnp.prod(1.0 - hop_mark, axis=-1)
+    p_sub_fabric = 1.0 - jnp.prod(1.0 - hop_mark[..., 1:-1], axis=-1)
+    return p_sub, p_sub_fabric
+
+
+def queue_mask_for(topo: Topology) -> jax.Array:
+    """1.0 on links that queue and ECN-mark, 0.0 on host_tx (NIC-internal
+    backlog, no ECN there) and on the -1 sentinel slot."""
+    nl = topo.n_links
+    h0 = nl - 2 * topo.n_hosts
+    mask = jnp.ones((nl + 1,), jnp.float32)
+    mask = mask.at[h0 : h0 + topo.n_hosts].set(0.0)
+    return mask.at[nl].set(0.0)
+
+
+def integrate_queue(
+    queue: jax.Array,  # f32[n_links + 1]
+    arrival: jax.Array,  # f32[n_links + 1]
+    capacity: jax.Array,  # f32[n_links + 1]
+    queue_mask: jax.Array,  # f32[n_links + 1]
+    dparams,
+    *,
+    dt: float,
+    qmax_bytes: float,
+    n_links: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Queue integration + RED/ECN marks for dataplanes that compute their
+    own arrival vector (DRILL's spray).  cascade() fuses the same update."""
+    from repro.netsim import dcqcn as dcqcn_mod
+
+    new_queue = jnp.clip(
+        queue + (arrival - capacity) * dt / 8.0, 0.0, qmax_bytes
+    ) * queue_mask
+    p_mark = dcqcn_mod.mark_probability(new_queue, dparams).at[n_links].set(0.0)
+    return new_queue, p_mark
+
+
+# ------------------------------------------------------------------ DRILL
+def drill_spray(
+    topo: Topology,
+    queue: jax.Array,  # f32[n_links + 1]
+    rc0: jax.Array,  # f32[n] per-flow offered rate (sub-flow 0)
+    src: jax.Array,  # i32[n] source hosts
+    dst: jax.Array,  # i32[n]
+    src_leaf: jax.Array,  # i32[n]
+    dst_leaf: jax.Array,  # i32[n]
+    active0: jax.Array,  # bool[n, 1]
+    drill_q0: float,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """DRILL's per-packet spray on a 2-tier Clos: inverse-queue weights over
+    all paths, cascaded host_tx -> uplink -> downlink -> host_rx.
+
+    Returns (arrival[n_links+1], thr[n] delivered rate before the go-back-N
+    penalty, w[n, P] path weights, pq[n, P] per-path queue bytes).
+    """
+    from repro.core import baselines
+
+    nl = topo.n_links
+    L_, S_ = topo.n_leaf, topo.n_paths
+    h0 = nl - 2 * topo.n_hosts
+    up0 = 0
+    pq = path_queue_2tier(topo, queue, src_leaf, dst_leaf)  # [n, P]
+    w = baselines.drill_weights(pq, drill_q0) * active0
+    arrival = jnp.zeros((nl + 1,), jnp.float32)
+    # hop 0: host NIC
+    tx_load = jax.ops.segment_sum(rc0, src, num_segments=topo.n_hosts)
+    arrival = arrival.at[h0 : h0 + topo.n_hosts].add(tx_load)
+    s_tx = jnp.minimum(1.0, topo.capacity[h0 + src] / jnp.maximum(tx_load[src], 1.0))
+    r0 = rc0 * s_tx  # [n]
+    # hop 1: uplinks (per-path split)
+    r0w = r0[:, None] * w  # [n, P]
+    up_load = jax.ops.segment_sum(r0w, src_leaf, num_segments=L_)  # [L, P]
+    arrival = arrival.at[up0 : up0 + L_ * S_].add(up_load.reshape(-1))
+    cap_up = topo.capacity[up0 : up0 + L_ * S_].reshape(L_, S_)
+    s_up = jnp.minimum(1.0, cap_up / jnp.maximum(up_load, 1.0))
+    r1 = r0w * s_up[src_leaf]  # [n, P]
+    # hop 2: downlinks
+    dn_load = jax.ops.segment_sum(r1, dst_leaf, num_segments=L_)  # [L, P] (by dst)
+    arrival = arrival.at[L_ * S_ : 2 * L_ * S_].add(dn_load.T.reshape(-1))
+    cap_dn = topo.capacity[L_ * S_ : 2 * L_ * S_].reshape(S_, L_)
+    s_dn = jnp.minimum(1.0, cap_dn.T / jnp.maximum(dn_load, 1.0))  # [L, P]
+    r2 = r1 * s_dn[dst_leaf]  # [n, P]
+    # hop 3: receiver NIC
+    r2sum = jnp.sum(r2, -1)
+    rx_load = jax.ops.segment_sum(r2sum, dst, num_segments=topo.n_hosts)
+    arrival = arrival.at[h0 + topo.n_hosts : h0 + 2 * topo.n_hosts].add(rx_load)
+    s_rx = jnp.minimum(
+        1.0, topo.capacity[h0 + topo.n_hosts + dst] / jnp.maximum(rx_load[dst], 1.0)
+    )
+    thr = r2sum * s_rx  # [n]
+    return arrival, thr, w, pq
+
+
+def drill_mark_probs(
+    topo: Topology,
+    p_mark: jax.Array,  # f32[n_links + 1]
+    w: jax.Array,  # f32[n, P]
+    src_leaf: jax.Array,
+    dst_leaf: jax.Array,
+    dst: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """(p_sub[n, 1], p_sub_fabric[n, 1]) for DRILL's weighted spray."""
+    nl = topo.n_links
+    L_, S_ = topo.n_leaf, topo.n_paths
+    h0 = nl - 2 * topo.n_hosts
+    pm_up = p_mark[0 : L_ * S_].reshape(L_, S_)[src_leaf]
+    pm_dn = p_mark[L_ * S_ : 2 * L_ * S_].reshape(S_, L_).T[dst_leaf]
+    pm_fab = 1.0 - (1.0 - pm_up) * (1.0 - pm_dn)  # [n, P]
+    p_sub_fabric = jnp.sum(w * pm_fab, -1, keepdims=True)
+    p_host = p_mark[h0 + topo.n_hosts + dst]
+    p_sub = 1.0 - (1.0 - p_sub_fabric) * (1.0 - p_host[:, None])
+    return p_sub, p_sub_fabric
+
+
+def drill_gbn_factor(
+    topo: Topology,
+    pq: jax.Array,  # f32[n, P] per-path queue bytes
+    w: jax.Array,  # f32[n, P] spray weights
+    rc0: jax.Array,  # f32[n] offered rate
+    *,
+    mtu_bytes: float,
+    jitter_mtus: float,
+    window_pkts: float,
+) -> jax.Array:
+    """Go-back-N goodput penalty for DRILL's spray: packets of ONE QP sprayed
+    over paths whose queueing delays differ get reordered; even with equal
+    AVERAGE queues, per-packet occupancy jitter of O(queue) reorders at high
+    rate.  spread = max over used paths of |delay - min|, floored by the
+    jitter of the mean queue.  Returns the goodput multiplier f32[n]."""
+    from repro.core import gbn
+
+    P = topo.n_paths
+    up_cap = topo.capacity[0]  # uplink block starts at 0 (2-tier layout)
+    d_path = pq * 8.0 / jnp.maximum(up_cap, 1.0)  # [n, P] seconds
+    used = w > (0.5 / P)
+    dmax = jnp.max(jnp.where(used, d_path, -jnp.inf), -1)
+    dmin = jnp.min(jnp.where(used, d_path, jnp.inf), -1)
+    spread = jnp.where(jnp.isfinite(dmax) & jnp.isfinite(dmin), dmax - dmin, 0.0)
+    mean_q = jnp.sum(jnp.where(used, pq, 0.0), -1) / jnp.maximum(jnp.sum(used, -1), 1)
+    jitter_bytes = jnp.minimum(0.5 * mean_q, jitter_mtus * mtu_bytes)
+    jitter = jitter_bytes * 8.0 / jnp.maximum(up_cap, 1.0)
+    p_ooo = gbn.ooo_probability(jnp.maximum(spread, jitter), rc0, mtu_bytes)
+    return gbn.gbn_goodput_factor(p_ooo, window_pkts)
+
+
+def path_queue_2tier(topo: Topology, queue, src_leaf, dst_leaf) -> jax.Array:
+    """Queue bytes along each (up, down) path for every flow: f32[n, P]."""
+    S, L = topo.n_paths, topo.n_leaf
+    q_up = queue[0 : L * S].reshape(L, S)
+    q_dn = queue[L * S : 2 * L * S].reshape(S, L)
+    return q_up[src_leaf] + q_dn[:, :].T[dst_leaf]

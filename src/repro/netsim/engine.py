@@ -29,12 +29,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import baselines, congestion_table as ctab, gbn, hashing, routing, shaper
-from repro.netsim import dcqcn as dcqcn_mod
+from repro.core import baselines, congestion_table as ctab, hashing, routing, shaper
+from repro.netsim import dataplane, dcqcn as dcqcn_mod
 from repro.netsim.topology import Topology
 from repro.netsim.workloads import Trace
 
 SCHEMES = ("seqbalance", "ecmp", "letflow", "conga", "drill")
+
+# A sub-flow is complete when its remaining bytes drop below this.  The
+# ``rc <= remaining*8/dt`` cap makes the last bytes decay geometrically, so
+# an exact-zero test would tail for ~8 steps on f32 underflow — and WHICH
+# step it underflows on is 1-ulp sensitive to summation order, which would
+# make dense vs active-window finish times diverge.  An eighth of a byte is
+# far below one packet, so cutting there changes nothing physical, and even
+# MAX_SUBFLOWS-many sub-flow residues stay under one byte per WQE.
+DONE_EPS_BYTES = 0.125
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,9 +65,13 @@ class SimConfig:
     # packets are mirrored back to the source ToR within one step (the
     # expected-marks intensity; deterministic, avoids mark-noise herding)
     cong_threshold_pkts: float = 1.0
+    # dataplane backend: "auto" (Pallas on TPU, XLA elsewhere), "xla",
+    # "pallas", or "pallas_interpret" (tests) — see netsim/dataplane.py
+    dataplane: str = "auto"
 
     def __post_init__(self):
         assert self.scheme in SCHEMES, self.scheme
+        assert self.dataplane in ("auto", "xla", "pallas", "pallas_interpret")
         if self.scheme != "seqbalance":
             object.__setattr__(self, "n_sub", 1)
 
@@ -88,22 +101,21 @@ def _u32(x):
     return jnp.asarray(x, jnp.uint32)
 
 
-def build_sim(topo: Topology, cfg: SimConfig, trace: Trace):
-    """Returns (init_state, step_fn, static) for the given scheme/topo/trace."""
-    F = len(trace.sizes)
+class FlowConsts(NamedTuple):
+    """Per-flow constants derived once from the trace (shared by the dense
+    oracle here and the active-window engine in netsim/compact.py)."""
+
+    sub_sizes: jax.Array  # f32[F, N] Shaper split (min_split floor applied)
+    s5: tuple  # 4 x u32[F, N] per-sub-flow five-tuples (SeqBalance QPs)
+    f5: tuple  # 4 x u32[F] per-flow five-tuple (other schemes)
+    sub_salt: jax.Array  # u32[F, N] DCQCN mark-draw salt
+    src_leaf: jax.Array  # i32[F]
+    dst_leaf: jax.Array  # i32[F]
+
+
+def flow_constants(topo: Topology, cfg: SimConfig, sizes, src, dst, fid) -> FlowConsts:
+    F = sizes.shape[0]
     N = cfg.n_sub
-    P = topo.n_paths
-    hpl = topo.hosts_per_leaf
-
-    sizes = jnp.asarray(trace.sizes)
-    arrivals = jnp.asarray(trace.arrivals)
-    src = jnp.asarray(trace.src)
-    dst = jnp.asarray(trace.dst)
-    fid = jnp.asarray(trace.flow_id)
-    valid = jnp.asarray(trace.valid)
-    src_leaf = src // hpl
-    dst_leaf = dst // hpl
-
     sub_sizes = shaper.split_wqe(sizes, N)  # f32[F, N]
     if N > 1:
         # The Shaper only segments WQEs worth segmenting: below the floor a
@@ -119,7 +131,32 @@ def build_sim(topo: Topology, cfg: SimConfig, trace: Trace):
     f5 = (_u32(src), _u32(dst), _u32(0xB000) + (hashing.fmix32(fid) % _u32(0x3FFF)),
           jnp.full((F,), 4791, jnp.uint32))
     sub_salt = hashing.fmix32(s5[2] ^ (_u32(fid)[:, None] * _u32(2246822519)))  # [F,N]
-    line_rate = topo.capacity[topo.n_links - 2 * topo.n_hosts]  # host_tx[0] bw
+    hpl = topo.hosts_per_leaf
+    return FlowConsts(sub_sizes, s5, f5, sub_salt, src // hpl, dst // hpl)
+
+
+def line_rate_of(topo: Topology) -> jax.Array:
+    return topo.capacity[topo.n_links - 2 * topo.n_hosts]  # host_tx[0] bw
+
+
+def build_sim(topo: Topology, cfg: SimConfig, trace: Trace):
+    """Returns (init_state, step_fn, static) for the given scheme/topo/trace."""
+    F = len(trace.sizes)
+    N = cfg.n_sub
+    P = topo.n_paths
+
+    sizes = jnp.asarray(trace.sizes)
+    arrivals = jnp.asarray(trace.arrivals)
+    src = jnp.asarray(trace.src)
+    dst = jnp.asarray(trace.dst)
+    fid = jnp.asarray(trace.flow_id)
+    valid = jnp.asarray(trace.valid)
+
+    fc = flow_constants(topo, cfg, sizes, src, dst, fid)
+    sub_sizes, s5, f5, sub_salt = fc.sub_sizes, fc.s5, fc.f5, fc.sub_salt
+    src_leaf, dst_leaf = fc.src_leaf, fc.dst_leaf
+    line_rate = line_rate_of(topo)
+    qmask = dataplane.queue_mask_for(topo)
 
     if cfg.scheme in ("conga", "drill"):
         assert topo.kind == "leaf_spine", f"{cfg.scheme} is 2-tier only (paper §IV.B)"
@@ -141,23 +178,7 @@ def build_sim(topo: Topology, cfg: SimConfig, trace: Trace):
             step=jnp.zeros((), jnp.int32),
         )
 
-    up0 = 0  # uplink block offset (leaf_spine); three_tier shares layout idea
     dparams = cfg.dcqcn
-
-    def _path_queue_2tier(queue, sleaf, dleaf):
-        """q along each path for every flow: f32[F, P] (2-tier only)."""
-        S = P
-        L = topo.n_leaf
-        q_up = queue[up0 : up0 + L * S].reshape(L, S)
-        q_dn = queue[L * S : 2 * L * S].reshape(S, L)
-        return q_up[sleaf] + q_dn[:, :].T[dleaf]  # [F,P]
-
-    def _path_scale_2tier(scale, sleaf, dleaf):
-        S = P
-        L = topo.n_leaf
-        s_up = scale[up0 : up0 + L * S].reshape(L, S)
-        s_dn = scale[L * S : 2 * L * S].reshape(S, L)
-        return jnp.minimum(s_up[sleaf], s_dn.T[dleaf])  # [F,P]
 
     def step_fn(state: SimState, _=None):
         t = state.step.astype(jnp.float32) * cfg.dt
@@ -198,7 +219,7 @@ def build_sim(topo: Topology, cfg: SimConfig, trace: Trace):
                 # fluid model would otherwise herd every same-step arrival
                 # onto one path, which the real per-flowlet DRE feedback
                 # does not do).
-                pq = _path_queue_2tier(state.queue, src_leaf, dst_leaf)
+                pq = dataplane.path_queue_2tier(topo, state.queue, src_leaf, dst_leaf)
                 p_re = baselines.conga_paths(path[:, 0], gap, pq)
             p_next = jnp.where(newly, p_init, jnp.where(active_flow, p_re, path[:, 0]))
             path = p_next[:, None]
@@ -215,99 +236,41 @@ def build_sim(topo: Topology, cfg: SimConfig, trace: Trace):
 
         # -------- offered load, cascaded hop-by-hop (NIC serializes first,
         # then fabric: a hop's arrivals are the UPSTREAM-scaled rates, so a
-        # host can never inject more than its NIC line rate into the fabric)
+        # host can never inject more than its NIC line rate into the fabric).
+        # The pipeline lives in netsim/dataplane.py, shared with the
+        # active-window engine and the linkload_cascade Pallas kernel.
         links = topo.subflow_links(src[:, None], dst[:, None], path)  # [F,N,6]
-        lid = jnp.where(links >= 0, links, nl)
-        h0 = nl - 2 * topo.n_hosts  # host_tx block offset
 
         if cfg.scheme == "drill":
-            pq = _path_queue_2tier(state.queue, src_leaf, dst_leaf)  # [F,P]
-            w = baselines.drill_weights(pq, cfg.drill_q0) * active[:, 0:1]
-            L_, S_ = topo.n_leaf, P
-            arrival = jnp.zeros((nl + 1,), jnp.float32)
-            # hop 0: host NIC
-            tx_load = jax.ops.segment_sum(rc[:, 0], src, num_segments=topo.n_hosts)
-            arrival = arrival.at[h0 : h0 + topo.n_hosts].add(tx_load)
-            s_tx = jnp.minimum(1.0, topo.capacity[h0 + src] / jnp.maximum(tx_load[src], 1.0))
-            r0 = rc[:, 0] * s_tx  # [F]
-            # hop 1: uplinks (per-path split)
-            r0w = r0[:, None] * w  # [F,P]
-            up_load = jax.ops.segment_sum(r0w, src_leaf, num_segments=L_)  # [L,P]
-            arrival = arrival.at[up0 : up0 + L_ * S_].add(up_load.reshape(-1))
-            cap_up = topo.capacity[up0 : up0 + L_ * S_].reshape(L_, S_)
-            s_up = jnp.minimum(1.0, cap_up / jnp.maximum(up_load, 1.0))
-            r1 = r0w * s_up[src_leaf]  # [F,P]
-            # hop 2: downlinks
-            dn_load = jax.ops.segment_sum(r1, dst_leaf, num_segments=L_)  # [L,P] (by dst)
-            arrival = arrival.at[L_ * S_ : 2 * L_ * S_].add(dn_load.T.reshape(-1))
-            cap_dn = topo.capacity[L_ * S_ : 2 * L_ * S_].reshape(S_, L_)
-            s_dn = jnp.minimum(1.0, cap_dn.T / jnp.maximum(dn_load, 1.0))  # [L,P]
-            r2 = r1 * s_dn[dst_leaf]  # [F,P]
-            # hop 3: receiver NIC
-            r2sum = jnp.sum(r2, -1)
-            rx_load = jax.ops.segment_sum(r2sum, dst, num_segments=topo.n_hosts)
-            arrival = arrival.at[h0 + topo.n_hosts : h0 + 2 * topo.n_hosts].add(rx_load)
-            s_rx = jnp.minimum(
-                1.0, topo.capacity[h0 + topo.n_hosts + dst] / jnp.maximum(rx_load[dst], 1.0)
+            arrival, thr, w, pq = dataplane.drill_spray(
+                topo, state.queue, rc[:, 0], src, dst, src_leaf, dst_leaf,
+                active[:, 0:1], cfg.drill_q0,
             )
-            thr = r2sum * s_rx  # [F]
-        else:
-            r = rc  # [F,N]
-            arrival = jnp.zeros((nl + 1,), jnp.float32)
-            for h in range(6):
-                lh = lid[:, :, h]
-                load_h = jax.ops.segment_sum(r.reshape(-1), lh.reshape(-1), num_segments=nl + 1)
-                arrival = arrival + load_h.at[nl].set(0.0)
-                s_h = jnp.minimum(1.0, topo.capacity[lh] / jnp.maximum(load_h[lh], 1.0))
-                r = r * jnp.where(links[:, :, h] >= 0, s_h, 1.0)
-            thr = r  # [F,N] delivered rate after all hops
-
-        new_queue = jnp.clip(
-            state.queue + (arrival - topo.capacity) * cfg.dt / 8.0, 0.0, cfg.qmax_bytes
-        )
-        # host_tx backlog is NIC-internal (no ECN there); switch queues mark.
-        new_queue = new_queue.at[h0 : h0 + topo.n_hosts].set(0.0)
-        p_mark = dcqcn_mod.mark_probability(new_queue, dparams)  # [nl+1]
-        p_mark = p_mark.at[nl].set(0.0)
-
-        # ---------------- per-sub-flow ECN marks ----------------
-        if cfg.scheme == "drill":
-            L_, S_ = topo.n_leaf, P
-            pm_up = p_mark[up0 : up0 + L_ * S_].reshape(L_, S_)[src_leaf]
-            pm_dn = p_mark[L_ * S_ : 2 * L_ * S_].reshape(S_, L_).T[dst_leaf]
-            pm_fab = 1.0 - (1.0 - pm_up) * (1.0 - pm_dn)  # [F,P]
-            p_sub_fabric = jnp.sum(w * pm_fab, -1, keepdims=True)
-            p_host = p_mark[h0 + topo.n_hosts + dst]
-            p_sub = 1.0 - (1.0 - p_sub_fabric) * (1.0 - p_host[:, None])
-            # go-back-N penalty: packets of ONE QP sprayed over paths whose
-            # queueing delays differ get reordered; even with equal AVERAGE
-            # queues, per-packet occupancy jitter of O(queue) reorders at
-            # high rate.  spread = max over used paths of |delay - min|,
-            # floored by the jitter of the mean queue.
-            d_path = pq * 8.0 / jnp.maximum(topo.capacity[up0], 1.0)  # [F,P] seconds
-            used = w > (0.5 / P)
-            dmax = jnp.max(jnp.where(used, d_path, -jnp.inf), -1)
-            dmin = jnp.min(jnp.where(used, d_path, jnp.inf), -1)
-            spread = jnp.where(jnp.isfinite(dmax) & jnp.isfinite(dmin), dmax - dmin, 0.0)
-            mean_q = jnp.sum(jnp.where(used, pq, 0.0), -1) / jnp.maximum(
-                jnp.sum(used, -1), 1
+            new_queue, p_mark = dataplane.integrate_queue(
+                state.queue, arrival, topo.capacity, qmask, dparams,
+                dt=cfg.dt, qmax_bytes=cfg.qmax_bytes, n_links=nl,
             )
-            jitter_bytes = jnp.minimum(0.5 * mean_q, cfg.drill_jitter_mtus * dparams.mtu_bytes)
-            jitter = jitter_bytes * 8.0 / jnp.maximum(topo.capacity[up0], 1.0)
-            p_ooo = gbn.ooo_probability(jnp.maximum(spread, jitter), rc[:, 0], dparams.mtu_bytes)
-            thr = thr * gbn.gbn_goodput_factor(p_ooo, cfg.gbn_window_pkts)
+            p_sub, p_sub_fabric = dataplane.drill_mark_probs(
+                topo, p_mark, w, src_leaf, dst_leaf, dst
+            )
+            thr = thr * dataplane.drill_gbn_factor(
+                topo, pq, w, rc[:, 0], mtu_bytes=dparams.mtu_bytes,
+                jitter_mtus=cfg.drill_jitter_mtus, window_pkts=cfg.gbn_window_pkts,
+            )
             thr = thr[:, None]  # [F,1]
         else:
-            hop_mark = jnp.where(links >= 0, p_mark[lid], 0.0)
-            p_sub = 1.0 - jnp.prod(1.0 - hop_mark, axis=-1)  # [F,N]
-            fabric = links[..., 1:5]
-            fab_mark = jnp.where(fabric >= 0, p_mark[jnp.where(fabric >= 0, fabric, nl)], 0.0)
-            p_sub_fabric = 1.0 - jnp.prod(1.0 - fab_mark, axis=-1)
+            arrival, new_queue, p_mark, thr = dataplane.cascade(
+                links, rc, state.queue, topo.capacity, qmask,
+                n_links=nl, kmin=dparams.kmin_bytes, kmax=dparams.kmax_bytes,
+                pmax=dparams.pmax, dt=cfg.dt, qmax_bytes=cfg.qmax_bytes,
+                backend=cfg.dataplane,
+            )
+            p_sub, p_sub_fabric = dataplane.subflow_mark_probs(links, p_mark, nl)
 
         # ---------------- transfer progress & CQE ----------------
         delivered = thr * cfg.dt / 8.0  # bytes
         new_remaining = jnp.maximum(state.remaining - jnp.where(active, delivered, 0.0), 0.0)
-        sub_done = assigned[:, None] & (new_remaining <= 0.0)
+        sub_done = assigned[:, None] & (new_remaining <= DONE_EPS_BYTES)
         cqe = shaper.ack_mask(state.cqe, sub_done)
         all_done = shaper.cqe_ready(cqe) & assigned & valid
         finish = jnp.where(jnp.isinf(state.finish) & all_done, t + cfg.dt, state.finish)

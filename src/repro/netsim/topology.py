@@ -12,9 +12,10 @@ Two builders, matching the paper's evaluation setups:
     320 <= 1023, which — pleasingly — fits the paper's 10-bit PathTag.
 
 Links live in one flat capacity vector; every (sub-)flow touches at most
-``MAX_HOPS`` links: [host_tx, up1, (up2), (dn1), dn2, host_rx], padded with
--1.  The engine scatter-adds offered rates over these ids (the same
-computation the linkload Pallas kernel implements for the TPU target).
+``MAX_HOPS`` links: [host_tx, up1, (up2), (dn1), dn2, host_rx] (-1 = hop
+absent; 2-tier emits the compact 4-hop form).  The engine scatter-adds
+offered rates over these ids (the same computation the linkload Pallas
+kernel implements for the TPU target).
 
 Asymmetry (paper Fig. 8b/11): ``capacity_overrides`` rescales individual
 links — e.g. kill spine 3 and double spine 2's leaf links to 80G.
@@ -91,6 +92,9 @@ def leaf_spine(
     up0, dn0, tx0, rx0 = 0, L * S, 2 * L * S, 2 * L * S + H
 
     def subflow_links(src_host, dst_host, path):
+        # 4 real hops (no -1 padding columns): the dataplane cascade cost is
+        # linear in the hop count, so 2-tier flows carry a [.., 4] hop
+        # vector while three_tier keeps the full MAX_HOPS = 6.
         shp = jnp.broadcast_shapes(jnp.shape(src_host), jnp.shape(dst_host), jnp.shape(path))
         src_host, dst_host, path = (jnp.broadcast_to(a, shp) for a in (src_host, dst_host, path))
         src_leaf = src_host // hosts_per_leaf
@@ -100,8 +104,7 @@ def leaf_spine(
         dn = jnp.where(inter, dn0 + path * L + dst_leaf, -1)
         tx = tx0 + src_host
         rx = rx0 + dst_host
-        pad = jnp.full_like(tx, -1)
-        return jnp.stack([tx, up, pad, pad, dn, rx], axis=-1).astype(jnp.int32)
+        return jnp.stack([tx, up, dn, rx], axis=-1).astype(jnp.int32)
 
     uplink_ids = (np.arange(L)[:, None] * S + np.arange(S)[None, :]).astype(np.int32)
 

@@ -1,0 +1,191 @@
+"""Active-window engine vs dense oracle, fused dataplane vs ref oracle,
+and vmapped sweep vs serial runs (DESIGN.md §9)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import linkload as ll, ref
+from repro.netsim import compact, dataplane, engine, sweep, topology, workloads
+
+
+def small_topo():
+    return topology.leaf_spine(2, 4, 4, 100e9)
+
+
+def small_trace(topo, load=0.5, dur=1.5e-3, wl="alistorage", seed=0):
+    return workloads.poisson_trace(workloads.TraceConfig(
+        workload=wl, load=load, duration_s=dur, n_hosts=topo.n_hosts,
+        host_bw=100e9, seed=seed, hosts_per_leaf=topo.hosts_per_leaf,
+        load_base_bw=2 * 4 * 100e9,
+    ))
+
+
+# ------------------------------------------- compacted vs dense equivalence
+@pytest.mark.parametrize("scheme", engine.SCHEMES)
+def test_compact_matches_dense_oracle(scheme):
+    """The active-window engine is the same physics over a compacted state:
+    finish times must agree with the dense oracle exactly (both engines cut
+    transfers at the same DONE_EPS_BYTES threshold, so no underflow-tail
+    float sensitivity is left)."""
+    topo = small_topo()
+    trace = small_trace(topo)
+    cfg = engine.SimConfig(scheme=scheme, duration_s=6e-3)
+    st_dense, _ = engine.simulate(topo, cfg, trace)
+    st_comp, _ = compact.simulate_compact(topo, cfg, trace)
+    fd = np.asarray(st_dense.finish)
+    fc = st_comp.finish
+    assert st_comp.spill_steps == 0
+    np.testing.assert_array_equal(np.isfinite(fd), np.isfinite(fc))
+    done = np.isfinite(fd)
+    assert done.any()
+    np.testing.assert_array_equal(fc[done], fd[done])
+    np.testing.assert_allclose(
+        float(st_comp.cnp_pkts), float(st_dense.cnp_pkts), rtol=1e-5, atol=1e-3
+    )
+
+
+def test_compact_window_independent():
+    """With no spill, results must not depend on the window size."""
+    topo = small_topo()
+    trace = small_trace(topo)
+    cfg = engine.SimConfig(scheme="seqbalance", duration_s=6e-3)
+    a, _ = compact.simulate_compact(topo, cfg, trace, window_slots=512)
+    b, _ = compact.simulate_compact(topo, cfg, trace, window_slots=1024)
+    assert a.spill_steps == 0 and b.spill_steps == 0
+    np.testing.assert_array_equal(a.finish, b.finish)
+
+
+def test_compact_tiny_window_spills_but_degrades_gracefully():
+    """An undersized window must not lose flows: admission is delayed (NIC
+    backpressure), spill_steps reports it, and nearly as many flows still
+    complete as in an amply-sized run."""
+    topo = small_topo()
+    trace = small_trace(topo, dur=0.5e-3)
+    cfg = engine.SimConfig(scheme="ecmp", duration_s=8e-3)
+    st, _ = compact.simulate_compact(topo, cfg, trace, window_slots=16)
+    ample, _ = compact.simulate_compact(topo, cfg, trace, window_slots=2048)
+    assert st.spill_steps > 0 and ample.spill_steps == 0
+    done_small = np.isfinite(st.finish[trace.valid]).mean()
+    done_ample = np.isfinite(ample.finish[trace.valid]).mean()
+    assert done_small >= 0.9 * done_ample > 0.5
+
+
+def test_sweep_retries_spill_to_match_oracle():
+    """run_batch re-plans an undersized window until spill-free, so its
+    output always matches the dense oracle."""
+    topo = small_topo()
+    trace = small_trace(topo)
+    cfg = engine.SimConfig(scheme="ecmp", duration_s=6e-3)
+    res, _ = sweep.run_batch(topo, cfg, [trace], window_slots=64)
+    assert res[0].spill_steps == 0
+    assert res[0].window_slots > 64
+    st_dense, _ = engine.simulate(topo, cfg, trace)
+    fd = np.asarray(st_dense.finish)
+    done = np.isfinite(fd)
+    np.testing.assert_array_equal(res[0].finish[done], fd[done])
+
+
+# ------------------------------------------------ fused dataplane kernels
+@pytest.mark.parametrize("n,hops,L", [(100, 6, 50), (513, 4, 30), (64, 2, 5)])
+def test_linkload_cascade_kernel_vs_ref(n, hops, L):
+    ks = jax.random.split(jax.random.PRNGKey(n), 3)
+    lid = jax.random.randint(ks[0], (n, hops), -1, L).astype(jnp.int32)
+    rates = jax.random.uniform(ks[1], (n,)) * 1e9
+    queue = jax.random.uniform(ks[2], (L,)) * 2e6
+    cap = jnp.full((L,), 4e9)
+    qmask = jnp.ones((L,)).at[:2].set(0.0)
+    a1, q1, m1, t1 = ll.linkload_cascade(
+        lid, rates, queue, cap, qmask, n_links=L, block_n=64, interpret=True
+    )
+    a2, q2, m2, t2 = ref.linkload_cascade_ref(
+        lid, rates, L, 400e3, 1600e3, 0.2, queue, cap, qmask, 10e-6
+    )
+    np.testing.assert_allclose(np.asarray(a1), np.asarray(a2), rtol=2e-5, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(q1), np.asarray(q2), rtol=1e-4, atol=1.0)
+    np.testing.assert_allclose(np.asarray(m1), np.asarray(m2), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(t1), np.asarray(t2), rtol=2e-5, atol=1e-2)
+
+
+def test_dataplane_pallas_backend_matches_xla():
+    """cascade() must give the same answer through the Pallas kernel
+    (interpret mode on CPU) and the XLA segment-sum path."""
+    topo = small_topo()
+    key = jax.random.PRNGKey(7)
+    n = 96
+    src = jax.random.randint(key, (n,), 0, topo.n_hosts)
+    dst = (src + 4) % topo.n_hosts
+    path = jax.random.randint(key, (n,), 0, topo.n_paths)
+    links = topo.subflow_links(src, dst, path)
+    rates = jax.random.uniform(key, (n,)) * 50e9
+    queue = jnp.zeros((topo.n_links + 1,))
+    qmask = dataplane.queue_mask_for(topo)
+    kw = dict(n_links=topo.n_links, kmin=400e3, kmax=1600e3, pmax=0.2,
+              dt=10e-6, qmax_bytes=8e6)
+    out_x = dataplane.cascade(links, rates, queue, topo.capacity, qmask,
+                              backend="xla", **kw)
+    out_p = dataplane.cascade(links, rates, queue, topo.capacity, qmask,
+                              backend="pallas_interpret", **kw)
+    for x, p in zip(out_x, out_p):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(p), rtol=2e-5, atol=1e-2)
+
+
+def test_dense_engine_uses_same_dataplane():
+    """The dense oracle routes through netsim/dataplane.py: a one-step run
+    must reproduce linkload_cascade_ref on its own offered load."""
+    topo = small_topo()
+    trace = small_trace(topo, dur=0.3e-3)
+    cfg = engine.SimConfig(scheme="ecmp", duration_s=10e-6)  # single step
+    st, outs = engine.simulate(topo, cfg, trace)
+    assert np.asarray(outs.uplink_load).shape[0] == 1
+
+
+# --------------------------------------------------------- vmapped sweeps
+def test_sweep_vmapped_equals_serial():
+    topo = small_topo()
+    traces = [small_trace(topo, seed=s) for s in (0, 1, 2)]
+    cfg = engine.SimConfig(scheme="seqbalance", duration_s=4e-3)
+    batch, bouts = sweep.run_batch(topo, cfg, traces)
+    for i, t in enumerate(traces):
+        single, souts = sweep.run_one(topo, cfg, t)
+        np.testing.assert_array_equal(batch[i].finish, single.finish)
+        np.testing.assert_allclose(
+            np.asarray(bouts[i].max_queue), np.asarray(souts.max_queue)
+        )
+        np.testing.assert_allclose(
+            np.asarray(bouts[i].uplink_load), np.asarray(souts.uplink_load)
+        )
+
+
+def test_sweep_groups_mixed_sizes():
+    """Traces of very different sizes run in separate shape buckets but
+    return in input order, each matching its own serial run."""
+    topo = small_topo()
+    big = small_trace(topo, dur=1.5e-3)
+    tiny = small_trace(topo, wl="websearch", dur=0.3e-3, seed=5)
+    cfg = engine.SimConfig(scheme="ecmp", duration_s=4e-3)
+    batch, _ = sweep.run_batch(topo, cfg, [tiny, big])
+    for res, t in zip(batch, [tiny, big]):
+        single, _ = sweep.run_one(topo, cfg, t)
+        np.testing.assert_array_equal(res.finish, single.finish)
+
+
+def test_sweep_jobs_match_serial():
+    topo = small_topo()
+    trace = small_trace(topo)
+    cfgs = [engine.SimConfig(scheme=s, duration_s=4e-3) for s in ("ecmp", "letflow")]
+    jobs = [(topo, c, [trace]) for c in cfgs]
+    out = sweep.run_jobs(jobs, workers=2)
+    for cfg, (res, _) in zip(cfgs, out):
+        single, _ = sweep.run_one(topo, cfg, trace)
+        np.testing.assert_array_equal(res[0].finish, single.finish)
+
+
+def test_max_concurrency_bound_sane():
+    topo = small_topo()
+    trace = small_trace(topo)
+    arrays, _, F = compact.sort_trace(trace)
+    w = compact.max_concurrency_bound(arrays[0], arrays[1], arrays[5], 100e9)
+    assert 0 < w
+    a = compact.max_admits_per_step(arrays[1], arrays[5], 10e-6)
+    assert 1 <= a <= F
