@@ -178,10 +178,14 @@ def bench_fig12_fct_2tier(fast=True):
     arr = 2.5e-3 if fast else 10e-3
     cases = fig12_cases(fast)
     traces = {c: _poisson(topo, c[0], c[1], arr) for c in cases}
-    schemes = ("ecmp", "seqbalance", "letflow", "conga", "drill")
+    # drill first: its spill-retry makes it the longest job by far, so it
+    # anchors one worker while the cheap schemes pack onto the others
+    schemes = ("drill", "ecmp", "seqbalance", "letflow", "conga")
     # one vmapped sweep job per scheme over every (workload, load) trace,
-    # all five jobs running concurrently
-    results, us = run_sim_jobs(topo, [traces[c] for c in cases], schemes, arr * 4)
+    # all five jobs running concurrently; FCT-only consumers sample the
+    # uplink trace at the imbalance stride instead of materializing [T,L,S]
+    results, us = run_sim_jobs(topo, [traces[c] for c in cases], schemes, arr * 4,
+                               uplink_sample_every=10)
     stats = {}
     for scheme in schemes:
         for c, (st, outs) in zip(cases, results[scheme]):
@@ -203,12 +207,13 @@ def bench_fig13_imbalance(fast=True):
     topo = topology.sim_2tier()
     arr = 2e-3 if fast else 10e-3
     wls = ("alistorage", "websearch")
-    schemes = ("ecmp", "seqbalance", "conga", "drill")
+    schemes = ("drill", "ecmp", "seqbalance", "conga")  # longest job first
     traces = [_poisson(topo, wl, 0.8, arr) for wl in wls]
-    results, us = run_sim_jobs(topo, traces, schemes, arr * 2)
+    results, us = run_sim_jobs(topo, traces, schemes, arr * 2,
+                               uplink_sample_every=10)
     for scheme in schemes:
         for wl, (st, outs) in zip(wls, results[scheme]):
-            imb = metrics.throughput_imbalance(outs)
+            imb = metrics.throughput_imbalance(outs, trace_stride=10)
             med = float(np.median(imb)) if len(imb) else -1
             p90 = float(np.percentile(imb, 90)) if len(imb) else -1
             emit(f"fig13_{wl}_{scheme}", us / (len(wls) * len(schemes)),
@@ -261,7 +266,7 @@ def bench_netsim_speedup(fast=True):
     arr = 2.5e-3 if fast else 10e-3
     dur = arr * 4
     cases = fig12_cases(fast)
-    schemes = ("ecmp", "seqbalance", "letflow", "conga", "drill")
+    schemes = ("drill", "ecmp", "seqbalance", "letflow", "conga")  # longest first
     traces = {c: _poisson(topo, c[0], c[1], arr) for c in cases}
     n_steps = int(round(dur / 10e-6))
     n_sims = len(cases) * len(schemes)
@@ -269,7 +274,8 @@ def bench_netsim_speedup(fast=True):
     sweep.clear_cache()  # time cold compiles like the dense path pays them
     t0 = time.time()
     compact_stats, spill = {}, 0
-    results, _ = run_sim_jobs(topo, [traces[c] for c in cases], schemes, dur)
+    results, _ = run_sim_jobs(topo, [traces[c] for c in cases], schemes, dur,
+                              uplink_sample_every=10)
     for scheme in schemes:
         for c, (st, _) in zip(cases, results[scheme]):
             compact_stats[(scheme, c)] = fct(st, traces[c], topo, 100e9)
@@ -306,6 +312,41 @@ def bench_netsim_speedup(fast=True):
         max_stat_diff_pct=round(max_diff, 4), spill_steps=int(spill),
         stat_diff_pct={k: round(v, 4) for k, v in diffs.items()},
     )
+    # reproducibility: how the sweep was dispatched on this machine
+    from repro.netsim import dataplane
+
+    PERF["sweep_config"] = dict(
+        workers=sweep.default_workers(len(schemes)),
+        dataplane_backend=dataplane.resolve_backend("auto"),
+        devices=sweep.sweep_devices(),
+        # persistent XLA compile cache: the recorded sweep is warm from the
+        # second process on (production sweeps relaunch identical programs)
+        compile_cache=sweep.enable_compile_cache() or "disabled",
+    )
+
+
+# ------------------------------------------- --profile (run.py flag)
+def bench_profile_phases(fast=True, schemes=("seqbalance", "ecmp")):
+    """Per-phase step-cost breakdown of the compact engine (admit /
+    cascade / dcqcn / finish) on the fig12 fast setup, so perf PRs can
+    attribute wins.  Not part of ALL — enabled by ``run.py --profile``."""
+    from repro.netsim import profile, topology
+    from repro.netsim.engine import SimConfig
+
+    topo = topology.sim_2tier()
+    arr = 2.5e-3 if fast else 10e-3
+    trace = _poisson(topo, "alistorage", 0.8, arr)
+    record = {}
+    for scheme in schemes:
+        cfg = SimConfig(scheme=scheme, duration_s=arr * 4)
+        times = profile.profile_phases(topo, cfg, trace)
+        record[scheme] = {k: round(v, 2) for k, v in times.items()}
+        for phase in ("admit", "cascade", "dcqcn", "finish"):
+            emit(f"profile_{scheme}_{phase}", times[phase],
+                 f"{times[phase]/max(times['phase_sum'],1e-9)*100:.0f}%_of_phase_sum")
+        emit(f"profile_{scheme}_step_fused", times["step_fused"],
+             f"phase_sum_{times['phase_sum']:.1f}us_W_{times['window_slots']}")
+    PERF["profile"] = record
 
 
 ALL = [

@@ -21,6 +21,9 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     ap.add_argument("--json", default="BENCH_netsim.json",
                     help="output path for the machine-readable record")
+    ap.add_argument("--profile", action="store_true",
+                    help="per-phase compact-step timing rows (admit / "
+                         "cascade / dcqcn / finish) for perf attribution")
     args = ap.parse_args()
 
     from benchmarks import common, paper_benches
@@ -28,6 +31,8 @@ def main() -> None:
     from benchmarks.bench_kernels import bench_kernels
 
     benches = list(paper_benches.ALL) + [bench_collectives, bench_kernels]
+    if args.profile:
+        benches.append(paper_benches.bench_profile_phases)
     print("name,us_per_call,derived")
     t0 = time.time()
     for b in benches:

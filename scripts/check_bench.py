@@ -1,0 +1,73 @@
+#!/usr/bin/env python
+"""Bench regression gate (scripts/ci.sh).
+
+Compares a freshly measured fig12 fast-sweep record (benchmarks/run.py
+--only netsim_speedup) against the committed BENCH_netsim.json baseline:
+
+  * per_step_us_compact may not regress more than --max-regress (default
+    30 %) over the baseline's value;
+  * max_stat_diff_pct (compact vs dense-oracle FCT stats) may not exceed
+    --max-stat-diff (default 0.01 %);
+  * the sweep must be spill-free (spill-free runs are the ones that match
+    the oracle bit-for-bit).
+
+The baseline record may contain several runs (before/after rows across
+PRs); the gate reads the top-level "fig12_sweep" entry — the current one.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("new", help="fresh bench JSON (the run under test)")
+    ap.add_argument("baseline", help="committed BENCH_netsim.json")
+    ap.add_argument("--max-regress", type=float, default=0.30,
+                    help="allowed fractional per-step slowdown vs baseline")
+    ap.add_argument("--max-stat-diff", type=float, default=0.01,
+                    help="allowed compact-vs-dense stat divergence (%%)")
+    args = ap.parse_args()
+
+    with open(args.new) as f:
+        new = json.load(f).get("fig12_sweep")
+    with open(args.baseline) as f:
+        base = json.load(f).get("fig12_sweep")
+    if not new:
+        print("FAIL: new record has no fig12_sweep entry "
+              "(did --only netsim_speedup run?)")
+        return 1
+    if not base:
+        print("WARN: baseline has no fig12_sweep entry; gating stat-diff only")
+
+    ok = True
+    per_step = new["per_step_us_compact"]
+    if base:
+        limit = base["per_step_us_compact"] * (1.0 + args.max_regress)
+        verdict = "OK" if per_step <= limit else "FAIL"
+        ok &= per_step <= limit
+        print(f"{verdict}: per_step_us_compact {per_step:.1f} "
+              f"(baseline {base['per_step_us_compact']:.1f}, "
+              f"limit {limit:.1f})")
+        if per_step > limit:
+            print("      note: the baseline is wall-clock from the machine "
+                  "that committed BENCH_netsim.json; on unrelated/slower "
+                  "hardware set REPRO_CI_SKIP_BENCH_GATE=1")
+
+    diff = new["max_stat_diff_pct"]
+    verdict = "OK" if diff <= args.max_stat_diff else "FAIL"
+    ok &= diff <= args.max_stat_diff
+    print(f"{verdict}: max_stat_diff_pct {diff:.4f} "
+          f"(limit {args.max_stat_diff})")
+
+    spill = new.get("spill_steps", 0)
+    verdict = "OK" if spill == 0 else "FAIL"
+    ok &= spill == 0
+    print(f"{verdict}: spill_steps {spill}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -9,3 +9,13 @@ python -m pytest -x -q
 # bench_fig10 fast mode: exercises trace generation, the sweep runner, the
 # compact engine, and the metrics layer end to end in under a minute.
 python -m benchmarks.run --only fig10 --json /tmp/BENCH_smoke.json
+
+# perf regression gate: rerun the fig12 fast sweep (compact + dense oracle)
+# and fail if the compact per-step cost regressed >30% vs the committed
+# baseline, if the compact-vs-dense stat divergence exceeds 0.01%, or if
+# the sweep spilled.  Skip with REPRO_CI_SKIP_BENCH_GATE=1 (e.g. on a
+# machine unrelated to the committed baseline's).
+if [ -z "${REPRO_CI_SKIP_BENCH_GATE:-}" ]; then
+  python -m benchmarks.run --only netsim_speedup --json /tmp/BENCH_gate.json
+  python scripts/check_bench.py /tmp/BENCH_gate.json BENCH_netsim.json
+fi

@@ -174,6 +174,195 @@ def _cascade_kernel(
         mark_ref[...] = mark
 
 
+def _cascade_tiered_kernel(
+    fab_ref, tx_ref, rx_ref, rate_ref, queue_ref, cap_ref, qmask_ref,
+    arrival_ref, newq_ref, mark_ref, scales_ref, thr_ref, r_ref,
+    *, n_links_padded, n_sub, hf, kmin, kmax, pmax, dt, qmax,
+):
+    """NIC-tiered cascade (netsim/dataplane.cascade_nic).  Grid =
+    (hf + 3, n_tiles), pass-major:
+
+      pass 0        host_tx — the N sub-flows of a flow share the NIC, so
+                    rates pre-reduce over N and the one-hot matmul runs at
+                    [block_n, L] instead of [N*block_n, L]
+      pass 1..hf    fabric hop p-1, per sub-flow (flat, as before)
+      pass hf+1     host_rx — pre-reduced again
+      pass hf+2     apply the rx scale -> thr, fuse queue + RED mark
+
+    Each pass first advances the running [N, block_n] rate scratch by the
+    PREVIOUS pass's scale (row-wise via tx for pass 1, per-sub-flow via the
+    fabric one-hot for passes 2..hf+1, row-wise via rx for the final pass).
+    scales_ref row p holds pass p's link load until the last tile converts
+    it in place to the capacity scale."""
+    p = pl.program_id(0)
+    t = pl.program_id(1)
+    n_tiles = pl.num_programs(1)
+
+    lids = fab_ref[...]  # [N, block_n, hf] i32 (sentinel = dummy column)
+    N, bn, _ = lids.shape
+    flat_lids = lids.reshape(N * bn, hf)
+    iota_b = jax.lax.broadcasted_iota(jnp.int32, (bn, n_links_padded), 1)
+    iota_nb = jax.lax.broadcasted_iota(jnp.int32, (N * bn, n_links_padded), 1)
+    hop_iota = jax.lax.broadcasted_iota(jnp.int32, (N * bn, hf), 1)
+    oh_tx = (iota_b == tx_ref[...][:, None]).astype(jnp.float32)
+    oh_rx = (iota_b == rx_ref[...][:, None]).astype(jnp.float32)
+
+    @pl.when((p == 0) & (t == 0))
+    def _init():
+        arrival_ref[...] = jnp.zeros_like(arrival_ref)
+
+    stored = pl.load(r_ref, (pl.dslice(t, 1), slice(None), slice(None)))[0]
+
+    # ---- advance the running rates by the previous pass's scale ----
+    @pl.when(p == 0)
+    def _r_fresh():
+        pl.store(r_ref, (pl.dslice(t, 1), slice(None), slice(None)),
+                 rate_ref[...][None])
+
+    @pl.when(p == 1)
+    def _r_tx():
+        s = oh_tx @ pl.load(scales_ref, (pl.dslice(0, 1), slice(None)))[0]
+        pl.store(r_ref, (pl.dslice(t, 1), slice(None), slice(None)),
+                 (stored * s[None, :])[None])
+
+    @pl.when((p >= 2) & (p <= hf + 1))
+    def _r_fab():
+        hprev = jnp.clip(p - 2, 0, hf - 1)
+        lid_prev = jnp.sum(jnp.where(hop_iota == hprev, flat_lids, 0), axis=1)
+        oh = (iota_nb == lid_prev[:, None]).astype(jnp.float32)
+        s = oh @ pl.load(scales_ref, (pl.dslice(p - 1, 1), slice(None)))[0]
+        pl.store(r_ref, (pl.dslice(t, 1), slice(None), slice(None)),
+                 (stored * s.reshape(N, bn))[None])
+
+    r = pl.load(r_ref, (pl.dslice(t, 1), slice(None), slice(None)))[0]
+
+    # ---- accumulate this pass's link load into scales_ref[p] ----
+    def _acc(contrib):
+        acc = pl.load(scales_ref, (pl.dslice(p, 1), slice(None)))[0]
+        acc = jnp.where(t == 0, 0.0, acc)
+        pl.store(scales_ref, (pl.dslice(p, 1), slice(None)), (acc + contrib)[None])
+
+    @pl.when(p == 0)
+    def _load_tx():
+        _acc(jnp.sum(r, axis=0) @ oh_tx)
+
+    @pl.when((p >= 1) & (p <= hf))
+    def _load_fab():
+        lid_h = jnp.sum(jnp.where(hop_iota == p - 1, flat_lids, 0), axis=1)
+        oh = (iota_nb == lid_h[:, None]).astype(jnp.float32)
+        _acc(r.reshape(N * bn) @ oh)
+
+    @pl.when(p == hf + 1)
+    def _load_rx():
+        _acc(jnp.sum(r, axis=0) @ oh_rx)
+
+    @pl.when((p <= hf + 1) & (t == n_tiles - 1))
+    def _finalize_hop():
+        load = pl.load(scales_ref, (pl.dslice(p, 1), slice(None)))[0]
+        arrival_ref[...] += load
+        scale = jnp.minimum(1.0, cap_ref[...] / jnp.maximum(load, 1.0))
+        pl.store(scales_ref, (pl.dslice(p, 1), slice(None)), scale[None])
+
+    @pl.when(p == hf + 2)
+    def _write_thr():
+        s = oh_rx @ pl.load(scales_ref, (pl.dslice(hf + 1, 1), slice(None)))[0]
+        thr_ref[...] = r * s[None, :]
+
+    @pl.when((p == hf + 2) & (t == n_tiles - 1))
+    def _finalize():
+        arr = arrival_ref[...]
+        newq = jnp.clip(queue_ref[...] + (arr - cap_ref[...]) * dt / 8.0, 0.0, qmax)
+        newq = newq * qmask_ref[...]
+        ramp = (newq - kmin) / (kmax - kmin)
+        mark = jnp.where(newq < kmin, 0.0, jnp.where(newq > kmax, 1.0, ramp * pmax))
+        newq_ref[...] = newq
+        mark_ref[...] = mark
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "n_links", "kmin", "kmax", "pmax", "dt", "qmax_bytes", "block_n", "interpret"
+    ),
+)
+def linkload_cascade_tiered(
+    fab_links: jax.Array,  # i32[n, N, hf]  (-1 = no hop)
+    tx_link: jax.Array,  # i32[n]
+    rx_link: jax.Array,  # i32[n]
+    rates: jax.Array,  # f32[n, N]
+    queue: jax.Array,  # f32[n_links]
+    capacity: jax.Array,  # f32[n_links]
+    queue_mask: jax.Array,  # f32[n_links]
+    *,
+    n_links: int,
+    kmin: float = 400e3,
+    kmax: float = 1600e3,
+    pmax: float = 0.2,
+    dt: float = 10e-6,
+    qmax_bytes: float = 8e6,
+    block_n: int = 512,
+    interpret: bool = False,
+):
+    """NIC-tiered fused dataplane step: (arrival, new_queue, mark, thr[n, N]).
+    Oracle: kernels/ref.py::linkload_cascade_tiered_ref."""
+    n, n_sub, hf = fab_links.shape
+    dummy = n_links
+    fab = jnp.where(fab_links >= 0, fab_links, dummy).astype(jnp.int32)
+    pad_n = (-n) % block_n
+    if pad_n:
+        fab = jnp.pad(fab, ((0, pad_n), (0, 0), (0, 0)), constant_values=dummy)
+        tx_link = jnp.pad(tx_link, (0, pad_n), constant_values=dummy)
+        rx_link = jnp.pad(rx_link, (0, pad_n), constant_values=dummy)
+        rates = jnp.pad(rates, ((0, pad_n), (0, 0)))
+    # sub-major layout: the scratch keeps block_n on the lane axis
+    fab_t = jnp.swapaxes(fab, 0, 1)  # [N, n_pad, hf]
+    rates_t = jnp.swapaxes(rates, 0, 1)  # [N, n_pad]
+    L_pad = ((n_links + 1 + 127) // 128) * 128
+    queue_p = jnp.pad(queue, (0, L_pad - n_links))
+    cap_p = jnp.pad(capacity[:n_links], (0, L_pad - n_links), constant_values=1e30)
+    qmask_p = jnp.pad(queue_mask[:n_links], (0, L_pad - n_links))
+
+    n_tiles = (n + pad_n) // block_n
+    grid = (hf + 3, n_tiles)
+    arrival, newq, mark, scales, thr = pl.pallas_call(
+        functools.partial(
+            _cascade_tiered_kernel,
+            n_links_padded=L_pad, n_sub=n_sub, hf=hf, kmin=kmin, kmax=kmax,
+            pmax=pmax, dt=dt, qmax=qmax_bytes,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n_sub, block_n, hf), lambda p, t: (0, t, 0)),
+            pl.BlockSpec((block_n,), lambda p, t: (t,)),
+            pl.BlockSpec((block_n,), lambda p, t: (t,)),
+            pl.BlockSpec((n_sub, block_n), lambda p, t: (0, t)),
+            pl.BlockSpec((L_pad,), lambda p, t: (0,)),
+            pl.BlockSpec((L_pad,), lambda p, t: (0,)),
+            pl.BlockSpec((L_pad,), lambda p, t: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((L_pad,), lambda p, t: (0,)),
+            pl.BlockSpec((L_pad,), lambda p, t: (0,)),
+            pl.BlockSpec((L_pad,), lambda p, t: (0,)),
+            pl.BlockSpec((hf + 2, L_pad), lambda p, t: (0, 0)),
+            pl.BlockSpec((n_sub, block_n), lambda p, t: (0, t)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((L_pad,), jnp.float32),
+            jax.ShapeDtypeStruct((L_pad,), jnp.float32),
+            jax.ShapeDtypeStruct((L_pad,), jnp.float32),
+            jax.ShapeDtypeStruct((hf + 2, L_pad), jnp.float32),
+            jax.ShapeDtypeStruct((n_sub, n + pad_n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((n_tiles, n_sub, block_n), jnp.float32)],
+        interpret=interpret,
+    )(fab_t, tx_link, rx_link, rates_t, queue_p, cap_p, qmask_p)
+    return (
+        arrival[:n_links], newq[:n_links], mark[:n_links],
+        jnp.swapaxes(thr, 0, 1)[:n],
+    )
+
+
 @functools.partial(
     jax.jit,
     static_argnames=(

@@ -1,4 +1,4 @@
-"""Active-window compacted fluid simulator (DESIGN.md §9).
+"""Active-window compacted fluid simulator (DESIGN.md §9/§10).
 
 The dense engine (netsim/engine.py) does O(F) work per ``dt`` step over all
 flows in the trace — but at any instant only a small working set is in
@@ -8,9 +8,13 @@ flows by arrival and carries a compact ``[W, N]`` working set of *slots*:
   * admit   — each step, flows whose arrival time has passed are gathered
     into free slots in arrival order (``searchsorted`` on the sorted arrival
     vector gives the arrived count; free slots are ranked by cumsum).
+    Admission also snapshots everything the per-step physics needs about
+    the flow into the slot-indexed ``SlotCache`` (NIC/fabric link ids, leaf
+    ids, DCQCN salts, host ids) — placed sub-flows never move, so none of
+    it has to be re-derived from the trace or topology per step.
   * run     — the per-step physics (path choice, DCQCN, hop cascade, ECN)
     is byte-identical to the dense engine but over W slots, via the shared
-    netsim/dataplane.py pipeline.
+    netsim/dataplane.py pipeline (NIC-tiered cascade).
   * finish  — completed slots scatter their finish time into a global
     ``[F]`` vector (scatter-min, drop-mode for empty slots) and free up.
 
@@ -20,6 +24,12 @@ engine does not lose flows: arrivals queue at the NIC and admit as slots
 free (``spill_steps`` in the result counts the steps where that happened,
 so callers can verify the bound held — it should be 0 for results that
 must match the dense oracle bit-for-bit-ish).
+
+The step loop runs as ``cfg.chunk_steps``-long ``lax.scan`` chunks inside
+an early-exit ``while_loop`` (once every flow has admitted and finished
+and the queues have drained, the remaining steps are exact no-ops), and
+``cfg.uplink_sample_every`` folds the imbalance window-averaging into the
+scan so sweeps stop materializing the full ``[T, L, S]`` uplink trace.
 
 The dense engine stays available as the correctness oracle
 (``benchmarks/common.run_sim(dense=True)``); equivalence is asserted in
@@ -43,6 +53,24 @@ from repro.netsim.topology import Topology
 from repro.netsim.workloads import Trace
 
 
+class SlotCache(NamedTuple):
+    """Admit-time route cache: per-slot constants snapshotted when a flow
+    lands in its slot, so the per-step physics never gathers from the
+    ``[F]`` trace arrays or re-derives link ids from the topology.  Stale
+    entries of freed slots are harmless — their offered rate is 0, so they
+    contribute exact +0.0 to every segment-sum they touch."""
+
+    tx: jax.Array  # i32[W] host_tx link id
+    rx: jax.Array  # i32[W] host_rx link id
+    fab: jax.Array  # i32[W, N, Hf] fabric link ids (schemes with pinned paths)
+    sleaf: jax.Array  # i32[W]
+    dleaf: jax.Array  # i32[W]
+    salt: jax.Array  # u32[W, N] DCQCN mark-draw salt
+    fid: jax.Array  # u32[W] flow id (flowlet reroute rng)
+    src: jax.Array  # i32[W] source host (DRILL spray)
+    dst: jax.Array  # i32[W]
+
+
 class CompactState(NamedTuple):
     slot_fid: jax.Array  # i32[W] sorted-flow index; F_pad = empty sentinel
     remaining: jax.Array  # f32[W, N]
@@ -57,6 +85,7 @@ class CompactState(NamedTuple):
     cnp_pkts: jax.Array  # f32 scalar
     spill_steps: jax.Array  # i32 — steps where an arrived flow found no slot
     step: jax.Array  # i32
+    cache: SlotCache
 
 
 class CompactResult(NamedTuple):
@@ -111,6 +140,21 @@ def max_admits_per_step(arrivals: np.ndarray, valid: np.ndarray, dt: float) -> i
     return int(np.bincount(steps - steps.min()).max())
 
 
+def plan_single_window(topo: Topology, cfg: SimConfig, arrays: tuple,
+                       F_pad: int) -> tuple[int, int]:
+    """(W, A) for a single sorted trace: the concurrency-bound window
+    (128-bucketed, floored at min(128, F_pad)) and the exact-peak admission
+    lane (32-bucketed).  Shared by ``simulate_compact`` and the --profile
+    harness so profiling always times the production shapes."""
+    line_rate = float(np.asarray(line_rate_of(topo)))
+    bound = max_concurrency_bound(arrays[0], arrays[1], arrays[5], line_rate)
+    W = int(min(((bound + 127) // 128) * 128, F_pad))
+    W = max(W, min(128, F_pad))
+    A = min(((max_admits_per_step(arrays[1], arrays[5], cfg.dt) + 31) // 32) * 32,
+            F_pad)
+    return W, A
+
+
 def init_compact_state(
     topo: Topology, cfg: SimConfig, W: int, F_pad: int,
     finish0: jax.Array | None = None,
@@ -121,6 +165,18 @@ def init_compact_state(
     N = cfg.n_sub
     if finish0 is None:
         finish0 = jnp.full((F_pad,), jnp.inf, jnp.float32)
+    hf = topo.n_fabric_hops
+    cache = SlotCache(
+        tx=jnp.zeros((W,), jnp.int32),
+        rx=jnp.zeros((W,), jnp.int32),
+        fab=jnp.zeros((W, N, hf), jnp.int32),
+        sleaf=jnp.zeros((W,), jnp.int32),
+        dleaf=jnp.zeros((W,), jnp.int32),
+        salt=jnp.zeros((W, N), jnp.uint32),
+        fid=jnp.zeros((W,), jnp.uint32),
+        src=jnp.zeros((W,), jnp.int32),
+        dst=jnp.zeros((W,), jnp.int32),
+    )
     return CompactState(
         slot_fid=jnp.full((W,), F_pad, jnp.int32),
         remaining=jnp.zeros((W, N), jnp.float32),
@@ -135,17 +191,25 @@ def init_compact_state(
         cnp_pkts=jnp.zeros((), jnp.float32),
         spill_steps=jnp.zeros((), jnp.int32),
         step=jnp.zeros((), jnp.int32),
+        cache=cache,
     )
 
 
 def build_compact_sim(topo: Topology, cfg: SimConfig, trace_arrays, W: int, F_pad: int,
-                      A: int = 256):
+                      A: int = 256, gate_admission: bool = False):
     """trace_arrays = (sizes, arrivals, src, dst, fid, valid), SORTED by
     arrival (invalid flows last, arrival=+inf), padded to F_pad.
     ``A`` is the admission lane width: at most A flows admit per step, and
-    admission-time work (path selection, slot resets) runs on [A]-shaped
-    rank arrays rather than the full [W] window.
-    Returns (init_state, step_fn)."""
+    admission-time work (path selection, route-cache fills, slot resets)
+    runs on [A]-shaped rank arrays rather than the full [W] window.
+    ``gate_admission`` wraps the admission block in a ``lax.cond`` on
+    "every flow already admitted" — paper traces stop arriving at 1/4 of
+    the horizon, so un-vmapped runs then skip the whole O(W) block.  Only
+    set it for programs that will NOT be vmapped: vmap lowers cond to
+    both-branches-plus-select, which pays instead of saves.
+    Returns (init_state, step_fn, phases) — ``phases`` maps the profile
+    phase names (admit / cascade / dcqcn / finish) to the closures
+    ``step_fn`` composes, for benchmarks/run.py --profile."""
     sizes, arrivals, src, dst, fid, valid = (jnp.asarray(a) for a in trace_arrays)
     N = cfg.n_sub
     P = topo.n_paths
@@ -163,12 +227,23 @@ def build_compact_sim(topo: Topology, cfg: SimConfig, trace_arrays, W: int, F_pa
         return init_compact_state(topo, cfg, W, F_pad)
 
     full_cqe = (jnp.uint32(1) << jnp.uint32(N)) - jnp.uint32(1)
+    # schemes whose sub-flow paths are pinned at admission carry their
+    # fabric link ids in the SlotCache; flowlet schemes may reroute any
+    # slot any step, so their (N=1) fabric row is rebuilt from the cached
+    # leaf ids — pure arithmetic, no [F]-sized gathers
+    cached_fab = cfg.scheme in ("seqbalance", "ecmp")
 
-    def step_fn(state: CompactState, _=None):
+    n_valid_total = jnp.sum(valid.astype(jnp.int32))
+
+    def _admission(state: CompactState):
+        """The gated part of admit_phase: gather-on-admit, slot resets,
+        route-cache fill, and NEW-flow path placement.  Runs under a
+        ``lax.cond`` — once every flow has admitted (arrivals stop early in
+        paper traces) this whole O(W) block is skipped for the rest of the
+        run (a real branch in un-vmapped runs; both-branches-plus-select
+        under vmap, which costs one cheap select per state leaf)."""
         t = state.step.astype(jnp.float32) * cfg.dt
         occ_prev = state.slot_fid < F_pad
-
-        # ---------------- admission (gather-on-admit) ----------------
         n_arr = jnp.searchsorted(arrivals, t, side="right").astype(jnp.int32)
         backlog = n_arr - state.admitted
         free = ~occ_prev
@@ -176,8 +251,6 @@ def build_compact_sim(topo: Topology, cfg: SimConfig, trace_arrays, W: int, F_pa
         m = jnp.minimum(jnp.minimum(backlog, free.sum()), A)
         newly = free & (free_rank < m)
         slot_fid = jnp.where(newly, state.admitted + free_rank, state.slot_fid)
-        occupied = slot_fid < F_pad
-        fidw = jnp.minimum(slot_fid, F_pad - 1)  # clamped gather index
 
         # admission lane: rank k in [0, A) takes flow admitted+k and lands
         # in the k-th free slot.  All admission-time work happens on these
@@ -189,10 +262,21 @@ def build_compact_sim(topo: Topology, cfg: SimConfig, trace_arrays, W: int, F_pa
             jnp.where(newly, free_rank, A)
         ].set(jnp.arange(W, dtype=jnp.int32), mode="drop")
 
-        # per-flow constants needed by the per-step physics (O(W) gathers)
-        src_w, dst_w = src[fidw], dst[fidw]
-        sleaf, dleaf = fc.src_leaf[fidw], fc.dst_leaf[fidw]
-        salt_w = fc.sub_salt[fidw]  # [W, N]
+        # route cache: one [F]-gather per constant at admission, never again
+        src_a, dst_a = src[rank_fid], dst[rank_fid]
+        sleaf_a, dleaf_a = fc.src_leaf[rank_fid], fc.dst_leaf[rank_fid]
+        tx_a, rx_a = topo.nic_links(src_a, dst_a)
+        ca = state.cache
+        cache = ca._replace(
+            tx=ca.tx.at[slot_of_rank].set(tx_a, mode="drop"),
+            rx=ca.rx.at[slot_of_rank].set(rx_a, mode="drop"),
+            sleaf=ca.sleaf.at[slot_of_rank].set(sleaf_a, mode="drop"),
+            dleaf=ca.dleaf.at[slot_of_rank].set(dleaf_a, mode="drop"),
+            salt=ca.salt.at[slot_of_rank].set(fc.sub_salt[rank_fid], mode="drop"),
+            fid=ca.fid.at[slot_of_rank].set(fid[rank_fid], mode="drop"),
+            src=ca.src.at[slot_of_rank].set(src_a, mode="drop"),
+            dst=ca.dst.at[slot_of_rank].set(dst_a, mode="drop"),
+        )
 
         # reset admitted slots (rank -> slot scatters)
         remaining = state.remaining.at[slot_of_rank].set(
@@ -205,52 +289,83 @@ def build_compact_sim(topo: Topology, cfg: SimConfig, trace_arrays, W: int, F_pa
             state.cc, dcqcn_mod.init_state((A, N), line_rate),
         )
 
-        # ---------------- path (re)assignment (dense-engine logic) ------
-        # new flows route on the [A] admission lane; only flowlet schemes
-        # touch every slot (their reroute check is inherently per-step)
+        # ---------------- NEW-flow path placement (dense-engine logic) --
+        # new flows route on the [A] admission lane; the flowlet schemes'
+        # per-step reroute of EXISTING slots lives in admit_phase below
+        # (it must run even when this block is skipped)
         path = state.path
         if cfg.scheme == "seqbalance":
             inact = ctab.inactive_matrix(state.table, t)  # [L, P]
             stale = inact.sum(-1, keepdims=True) > (P // 2)
             inact = jnp.where(stale, False, inact)
-            rows = inact[fc.src_leaf[rank_fid]][:, None, :]  # [A, 1, P]
+            rows = inact[sleaf_a][:, None, :]  # [A, 1, P]
             rows = jnp.broadcast_to(rows, (A, N, P))
             s5_a = tuple(a[rank_fid] for a in fc.s5)  # each [A, N]
             p_new = routing.select_paths(*s5_a, rows, P)  # [A, N]
             path = path.at[slot_of_rank].set(p_new, mode="drop")
-        elif cfg.scheme == "ecmp":
+        elif cfg.scheme in ("ecmp", "letflow", "conga"):
             f5_a = tuple(a[rank_fid] for a in fc.f5)  # each [A]
             p_new = routing.ecmp_paths(*f5_a, P)[:, None]  # [A, 1]
             path = path.at[slot_of_rank].set(p_new, mode="drop")
-        elif cfg.scheme in ("letflow", "conga"):
-            rng = hashing.fmix32(
-                fid[fidw] ^ state.step.astype(jnp.uint32) * jnp.uint32(0x85EBCA77)
-            )
-            gap = baselines.flowlet_gap_occurs(
-                cc.rc[:, 0], dparams.mtu_bytes, cfg.flowlet_timeout
-            )
-            if cfg.scheme == "letflow":
-                p_re = baselines.letflow_paths(path[:, 0], gap, rng, P)
-            else:
-                pq = dataplane.path_queue_2tier(topo, state.queue, sleaf, dleaf)
-                p_re = baselines.conga_paths(path[:, 0], gap, pq)
-            p_next = jnp.where(occ_prev, p_re, path[:, 0])[:, None]  # [W, 1]
-            f5_a = tuple(a[rank_fid] for a in fc.f5)
-            p_init = routing.ecmp_paths(*f5_a, P)[:, None]  # [A, 1]
-            path = p_next.at[slot_of_rank].set(p_init, mode="drop")
         else:  # drill: nominal path 0; real split via weights below
             path = path.at[slot_of_rank].set(0, mode="drop")
 
-        active = occupied[:, None] & ~sub_done
-        rc = jnp.where(
-            active, jnp.minimum(cc.rc, remaining * 8.0 / cfg.dt), 0.0
-        )  # [W, N]
+        if cached_fab:
+            fab_a = topo.fabric_links(
+                sleaf_a[:, None], dleaf_a[:, None], p_new)  # [A, N, Hf]
+            cache = cache._replace(
+                fab=cache.fab.at[slot_of_rank].set(fab_a, mode="drop"))
 
-        # ---------------- dataplane (shared with dense engine) ----------
-        links = topo.subflow_links(src_w[:, None], dst_w[:, None], path)  # [W,N,6]
+        return state._replace(
+            slot_fid=slot_fid, remaining=remaining, path=path,
+            sub_done=sub_done, cc=cc, cqe_bitmap=cqe_bitmap,
+            admitted=state.admitted + m,
+            spill_steps=state.spill_steps + (backlog > m).astype(jnp.int32),
+            cache=cache,
+        )
+
+    def admit_phase(state: CompactState):
+        """Admission (optionally gated: skipped once every flow has
+        admitted) plus the flowlet schemes' per-step reroute.  Step time
+        is derived from ``state.step`` inside ``_admission`` (the lax.cond
+        branch takes the state as its only operand)."""
+        occ_prev = state.slot_fid < F_pad
+        if gate_admission:
+            st = jax.lax.cond(
+                state.admitted < n_valid_total, _admission, lambda s: s, state)
+        else:
+            st = _admission(state)
+        if cfg.scheme in ("letflow", "conga"):
+            # reroute EXISTING slots at flowlet gaps; newly admitted slots
+            # keep their ECMP placement (occ_prev is pre-admission)
+            rng = hashing.fmix32(
+                st.cache.fid ^ st.step.astype(jnp.uint32) * jnp.uint32(0x85EBCA77)
+            )
+            gap = baselines.flowlet_gap_occurs(
+                st.cc.rc[:, 0], dparams.mtu_bytes, cfg.flowlet_timeout
+            )
+            if cfg.scheme == "letflow":
+                p_re = baselines.letflow_paths(st.path[:, 0], gap, rng, P)
+            else:
+                pq = dataplane.path_queue_2tier(
+                    topo, st.queue, st.cache.sleaf, st.cache.dleaf)
+                p_re = baselines.conga_paths(st.path[:, 0], gap, pq)
+            path = jnp.where(occ_prev, p_re, st.path[:, 0])[:, None]  # [W, 1]
+            st = st._replace(path=path)
+        return st
+
+    def cascade_phase(state: CompactState):
+        """Offered rates -> NIC-tiered hop cascade -> queue/ECN marks.
+        Returns (arrival, new_queue, thr, p_sub, p_sub_fabric, rc, active)."""
+        occupied = state.slot_fid < F_pad
+        active = occupied[:, None] & ~state.sub_done
+        rc = jnp.where(
+            active, jnp.minimum(state.cc.rc, state.remaining * 8.0 / cfg.dt), 0.0
+        )  # [W, N]
+        ca = state.cache
         if cfg.scheme == "drill":
             arrival, thr, w_spray, pq = dataplane.drill_spray(
-                topo, state.queue, rc[:, 0], src_w, dst_w, sleaf, dleaf,
+                topo, state.queue, rc[:, 0], ca.src, ca.dst, ca.sleaf, ca.dleaf,
                 active[:, 0:1], cfg.drill_q0,
             )
             new_queue, p_mark = dataplane.integrate_queue(
@@ -258,7 +373,7 @@ def build_compact_sim(topo: Topology, cfg: SimConfig, trace_arrays, W: int, F_pa
                 dt=cfg.dt, qmax_bytes=cfg.qmax_bytes, n_links=nl,
             )
             p_sub, p_sub_fabric = dataplane.drill_mark_probs(
-                topo, p_mark, w_spray, sleaf, dleaf, dst_w
+                topo, p_mark, w_spray, ca.sleaf, ca.dleaf, ca.dst
             )
             thr = thr * dataplane.drill_gbn_factor(
                 topo, pq, w_spray, rc[:, 0], mtu_bytes=dparams.mtu_bytes,
@@ -266,62 +381,86 @@ def build_compact_sim(topo: Topology, cfg: SimConfig, trace_arrays, W: int, F_pa
             )
             thr = thr[:, None]  # [W, 1]
         else:
-            arrival, new_queue, p_mark, thr = dataplane.cascade(
-                links, rc, state.queue, topo.capacity, qmask,
+            if cached_fab:
+                fab = ca.fab  # admit-time snapshot: paths never move
+            else:  # flowlet reroute: rebuild from cached leaf ids (no gathers)
+                fab = topo.fabric_links(
+                    ca.sleaf, ca.dleaf, state.path[:, 0])[:, None, :]
+            arrival, new_queue, p_mark, thr = dataplane.cascade_nic(
+                fab, ca.tx, ca.rx, rc, state.queue, topo.capacity, qmask,
                 n_links=nl, kmin=dparams.kmin_bytes, kmax=dparams.kmax_bytes,
                 pmax=dparams.pmax, dt=cfg.dt, qmax_bytes=cfg.qmax_bytes,
                 backend=cfg.dataplane,
             )
-            p_sub, p_sub_fabric = dataplane.subflow_mark_probs(links, p_mark, nl)
+            p_sub, p_sub_fabric = dataplane.subflow_mark_probs_nic(
+                fab, ca.tx, ca.rx, p_mark, nl)
+        return arrival, new_queue, thr, p_sub, p_sub_fabric, rc, active
 
-        # ---------------- transfer progress & CQE ----------------
+    def dcqcn_phase(state: CompactState, p_sub, active):
+        flow_salt = state.cache.salt if cfg.scheme == "seqbalance" \
+            else state.cache.salt[:, :1]
+        flow_salt = jnp.broadcast_to(flow_salt, (W, N))
+        cc, _ = dcqcn_mod.step(
+            state.cc, p_sub, active, cfg.dt, line_rate, dparams, state.step,
+            flow_salt,
+        )
+        return cc
+
+    def finish_phase(state: CompactState, t, thr, active, rc, p_sub_fabric):
+        """Transfer progress, bitmap CQE, scatter-on-finish, Congestion
+        Packet bookkeeping.  Returns (remaining, sub_done, cqe_bitmap,
+        slot_fid, finish, table, exp_cong_pkts)."""
+        occupied = state.slot_fid < F_pad
         delivered = thr * cfg.dt / 8.0  # bytes
-        new_remaining = jnp.maximum(remaining - jnp.where(active, delivered, 0.0), 0.0)
+        new_remaining = jnp.maximum(
+            state.remaining - jnp.where(active, delivered, 0.0), 0.0)
         sub_done = occupied[:, None] & (new_remaining <= DONE_EPS_BYTES)
         bits = (sub_done.astype(jnp.uint32) << jnp.arange(N, dtype=jnp.uint32)).sum(
             axis=-1, dtype=jnp.uint32
         )
-        cqe_bitmap = cqe_bitmap | bits
+        cqe_bitmap = state.cqe_bitmap | bits
         all_done = ((cqe_bitmap & full_cqe) == full_cqe) & occupied
         # scatter-on-finish: empty slots carry the F_pad sentinel -> dropped
-        finish = state.finish.at[slot_fid].min(
+        finish = state.finish.at[state.slot_fid].min(
             jnp.where(all_done, t + cfg.dt, jnp.inf), mode="drop"
         )
 
-        # ---------------- DCQCN ----------------
-        flow_salt = salt_w if cfg.scheme == "seqbalance" else salt_w[:, :1]
-        flow_salt = jnp.broadcast_to(flow_salt, (W, N))
-        cc, _ = dcqcn_mod.step(
-            cc, p_sub, active, cfg.dt, line_rate, dparams, state.step, flow_salt
-        )
-
-        # ---------------- SeqBalance Congestion Packets ----------------
         table = state.table
         pkts = jnp.where(active, rc * cfg.dt / (8.0 * dparams.mtu_bytes), 0.0)
         exp_cong_pkts = jnp.sum(pkts * p_sub_fabric)
         if cfg.scheme == "seqbalance":
             intensity = jnp.zeros((topo.n_leaf, P), jnp.float32)
-            idx_leaf = jnp.broadcast_to(sleaf[:, None], (W, N)).reshape(-1)
-            idx_path = jnp.clip(path, 0, P - 1).reshape(-1)
+            idx_leaf = jnp.broadcast_to(
+                state.cache.sleaf[:, None], (W, N)).reshape(-1)
+            idx_path = jnp.clip(state.path, 0, P - 1).reshape(-1)
             intensity = intensity.at[idx_leaf, idx_path].add(
                 (pkts * p_sub_fabric).reshape(-1)
             )
             dense_mask = intensity >= cfg.cong_threshold_pkts
             table = ctab.mark_congested_dense(table, dense_mask, t, cfg.phi)
+        slot_fid = jnp.where(all_done, F_pad, state.slot_fid)  # free slots
+        return (new_remaining, sub_done, cqe_bitmap, slot_fid, finish, table,
+                exp_cong_pkts)
 
-        new_state = CompactState(
-            slot_fid=jnp.where(all_done, F_pad, slot_fid),  # free finished slots
-            remaining=new_remaining,
-            path=path,
+    def step_fn(state: CompactState, _=None):
+        t = state.step.astype(jnp.float32) * cfg.dt
+        st = admit_phase(state)
+        arrival, new_queue, thr, p_sub, p_sub_fabric, rc, active = \
+            cascade_phase(st)
+        cc = dcqcn_phase(st, p_sub, active)
+        (remaining, sub_done, cqe_bitmap, slot_fid, finish, table,
+         exp_cong_pkts) = finish_phase(st, t, thr, active, rc, p_sub_fabric)
+
+        new_state = st._replace(
+            slot_fid=slot_fid,
+            remaining=remaining,
             sub_done=sub_done,
             cc=cc,
             cqe_bitmap=cqe_bitmap,
-            admitted=state.admitted + m,
             finish=finish,
             table=table,
             queue=new_queue,
             cnp_pkts=state.cnp_pkts + exp_cong_pkts,
-            spill_steps=state.spill_steps + (backlog > m).astype(jnp.int32),
             step=state.step + 1,
         )
         out = StepOutputs(
@@ -332,51 +471,102 @@ def build_compact_sim(topo: Topology, cfg: SimConfig, trace_arrays, W: int, F_pa
         )
         return new_state, out
 
-    return init_state, step_fn
+    phases = dict(admit=admit_phase, cascade=cascade_phase,
+                  dcqcn=dcqcn_phase, finish=finish_phase)
+    return init_state, step_fn, phases
+
+
+def plan_chunks(cfg: SimConfig, n_steps: int) -> tuple[int, int, int]:
+    """(K, n_chunks, tail): scan-chunk length (a multiple of the uplink
+    sample window, capped at the horizon), full chunks, and leftover steps.
+
+    Prefers a K that divides the horizon (searched down to half the
+    requested chunk size): a nonzero tail needs its own lax.cond'd scan,
+    which compiles the step body a SECOND time — a pure compile-latency
+    tax that a slightly shorter chunk avoids entirely."""
+    s = cfg.uplink_sample_every
+    K0 = max(1, cfg.chunk_steps // s) * s
+    K0 = min(K0, max(n_steps, 1))
+    for k in range(K0, max(K0 // 2, 1) - 1, -1):
+        if k % s == 0 and n_steps % k == 0:
+            return k, n_steps // k, 0
+    return K0, n_steps // K0, n_steps % K0
 
 
 def run_core(topo: Topology, cfg: SimConfig, W: int, F_pad: int, A: int,
-             n_steps: int, trace_arrays, finish0: jax.Array):
+             n_steps: int, trace_arrays, finish0: jax.Array,
+             gate_admission: bool = False):
     """Jit-friendly core: sorted/padded trace arrays + a donatable +inf
     finish buffer in, (finish[F_pad] in sorted order, cnp_pkts, spill_steps,
     per-step outputs) out.  Wrapped and cached by netsim/sweep.py;
     vmap-able over a leading batch axis of (trace_arrays, finish0).
 
-    Runs as a while_loop with EARLY EXIT: once every flow has been admitted
-    and finished and the queues have fully drained, the remaining steps of
-    the horizon are exact no-ops (zero offered load, zero queues — also in
-    the dense engine), so they are skipped and the preallocated per-step
-    outputs keep their zeros.  Typical paper sweeps (arrivals stop at 1/4
-    of the horizon) skip 30-50 % of steps this way."""
-    _, step_fn = build_compact_sim(topo, cfg, trace_arrays, W, F_pad, A)
+    The horizon runs as K-step ``lax.scan`` chunks inside a ``while_loop``
+    with EARLY EXIT: once every flow has been admitted and finished and the
+    queues have fully drained, the remaining steps of the horizon are exact
+    no-ops (zero offered load, zero queues — also in the dense engine), so
+    whole chunks are skipped and the preallocated per-step outputs keep
+    their zeros.  Typical paper sweeps (arrivals stop at 1/4 of the
+    horizon) skip 30-50 % of steps this way.  With
+    ``cfg.uplink_sample_every > 1`` the uplink trace is window-averaged
+    inside the chunk before it is written out, so only ``[T/s, L, S]`` is
+    ever materialized."""
+    _, step_fn, _ = build_compact_sim(topo, cfg, trace_arrays, W, F_pad, A,
+                                      gate_admission=gate_admission)
     init = init_compact_state(topo, cfg, W, F_pad, finish0)
     n_valid = jnp.sum(jnp.asarray(trace_arrays[5]).astype(jnp.int32))
     nl = topo.n_links
     uplink_shape = np.asarray(topo.uplink_ids).shape
+    s = cfg.uplink_sample_every
+    K, n_chunks, tail = plan_chunks(cfg, n_steps)
+    n_samples = n_steps // s
     outs0 = StepOutputs(
-        uplink_load=jnp.zeros((n_steps,) + uplink_shape, jnp.float32),
+        uplink_load=jnp.zeros((n_samples,) + uplink_shape, jnp.float32),
         goodput_total=jnp.zeros((n_steps,), jnp.float32),
         cnp_rate=jnp.zeros((n_steps,), jnp.float32),
         max_queue=jnp.zeros((n_steps,), jnp.float32),
     )
 
-    def cond(carry):
-        st, _ = carry
-        alive = (
+    def alive(st):
+        return (
             (st.admitted < n_valid)
             | jnp.any(st.slot_fid < F_pad)
             | (jnp.max(st.queue[:nl]) > 0.0)
         )
-        return (st.step < n_steps) & alive
 
-    def body(carry):
-        st, outs = carry
-        k = st.step
-        st2, o = step_fn(st)
-        outs2 = StepOutputs(*(a.at[k].set(v) for a, v in zip(outs, o)))
-        return st2, outs2
+    def run_block(st, outs, length):
+        """Scan ``length`` (static) steps and splice the outputs in at the
+        (chunk-aligned, so sample-window-aligned) offset ``st.step``."""
+        k0 = st.step
+        st2, o = jax.lax.scan(step_fn, st, None, length=length)
+        gp = jax.lax.dynamic_update_slice(outs.goodput_total, o.goodput_total, (k0,))
+        cn = jax.lax.dynamic_update_slice(outs.cnp_rate, o.cnp_rate, (k0,))
+        mq = jax.lax.dynamic_update_slice(outs.max_queue, o.max_queue, (k0,))
+        up = outs.uplink_load
+        nw = length // s
+        if nw:
+            slab = o.uplink_load[: nw * s]
+            if s > 1:
+                slab = slab.reshape((nw, s) + slab.shape[1:]).mean(axis=1)
+            up = jax.lax.dynamic_update_slice(
+                up, slab, (k0 // s,) + (0,) * len(uplink_shape))
+        return st2, StepOutputs(up, gp, cn, mq)
 
-    final, outs = jax.lax.while_loop(cond, body, (init, outs0))
+    carry = (init, outs0)
+    if n_chunks:
+        carry = jax.lax.while_loop(
+            lambda c: (c[0].step < n_chunks * K) & alive(c[0]),
+            lambda c: run_block(c[0], c[1], K),
+            carry,
+        )
+    if tail:  # horizon not divisible by K: one short block, same early exit
+        carry = jax.lax.cond(
+            alive(carry[0]),
+            lambda c: run_block(c[0], c[1], tail),
+            lambda c: c,
+            carry,
+        )
+    final, outs = carry
     return final.finish, final.cnp_pkts, final.spill_steps, outs
 
 
@@ -418,7 +608,8 @@ def pad_trace_arrays(arrays: tuple, F_pad: int) -> tuple:
 
 @functools.partial(jax.jit, static_argnums=(0, 1, 2, 3, 4, 5), donate_argnums=(7,))
 def _run_single(topo, cfg, W, F_pad, A, n_steps, trace_arrays, finish0):
-    return run_core(topo, cfg, W, F_pad, A, n_steps, trace_arrays, finish0)
+    return run_core(topo, cfg, W, F_pad, A, n_steps, trace_arrays, finish0,
+                    gate_admission=True)
 
 
 def simulate_compact(
@@ -430,15 +621,9 @@ def simulate_compact(
     per-step outputs are consumed."""
     arrays, inv, F = sort_trace(trace)
     F_pad = max(F, 1)
-    if window_slots is None:
-        line_rate = float(np.asarray(line_rate_of(topo)))
-        bound = max_concurrency_bound(arrays[0], arrays[1], arrays[5], line_rate)
-        W = int(min(((bound + 127) // 128) * 128, F_pad))
-        W = max(W, min(128, F_pad))
-    else:  # explicit window: honor it exactly (tests probe spill behavior)
-        W = max(8, min(int(window_slots), F_pad))
-    A = min(((max_admits_per_step(arrays[1], arrays[5], cfg.dt) + 31) // 32) * 32,
-            F_pad)
+    W, A = plan_single_window(topo, cfg, arrays, F_pad)
+    if window_slots is not None:  # explicit window: honor it exactly
+        W = max(8, min(int(window_slots), F_pad))  # (tests probe spill)
     n_steps = int(round(cfg.duration_s / cfg.dt))
     finish, cnp, spill, outs = _run_single(
         topo, cfg, W, F_pad, A, n_steps, tuple(jnp.asarray(a) for a in arrays),

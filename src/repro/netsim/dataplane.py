@@ -14,12 +14,21 @@ share bit-identical math:
   queue[l]    <- clip(queue + (arrival - cap) * dt/8, 0, qmax) * queue_mask
   p_mark[l]    = RED ramp on queue (kmin/kmax/pmax)
 
-Backends
+Both engines route through the NIC-TIERED form (``cascade_nic``): the N
+sub-flows of a flow always share their first (host_tx) and last (host_rx)
+hop, so those two hops pre-reduce over N and cost O(W) instead of O(W*N);
+only the fabric hops stay per sub-flow.  The flat ``cascade`` (identical
+physics, no pre-reduction) is kept as the oracle — tiered vs flat agree to
+float round-off (summation grouping differs), checked in
+tests/test_netsim_compact.py and the hypothesis property suite.
+
+Backends (both layouts)
   * ``xla``    — ``jax.ops.segment_sum`` per hop (the original engine loop;
     also the correctness oracle, mirrored in ``kernels/ref.py``).
-  * ``pallas`` — one fused ``kernels/linkload.py::linkload_cascade`` call:
-    the scatter-adds become one-hot matmuls on the MXU, the cascade walks
-    hops in the grid, and queue/mark fuse into the final grid step.
+  * ``pallas`` — one fused ``kernels/linkload.py::linkload_cascade`` /
+    ``linkload_cascade_tiered`` call: the scatter-adds become one-hot
+    matmuls on the MXU, the cascade walks hops in the grid, and queue/mark
+    fuse into the final grid step.
   * ``pallas_interpret`` — the same kernel interpreted on CPU (tests).
   * ``auto``   — pallas on TPU, xla everywhere else.
 
@@ -87,6 +96,101 @@ def cascade(
     return arrival, new_queue, p_mark, thr.reshape(shape)
 
 
+def cascade_nic(
+    fab_links: jax.Array,  # i32[..., N, Hf] fabric link ids, -1 = hop absent
+    tx_link: jax.Array,  # i32[...] host_tx link id (shared by the N sub-flows)
+    rx_link: jax.Array,  # i32[...] host_rx link id (shared by the N sub-flows)
+    rates: jax.Array,  # f32[..., N] offered rate per sub-flow (bps)
+    queue: jax.Array,  # f32[n_links + 1]
+    capacity: jax.Array,  # f32[n_links + 1] bps (sentinel = 1e30)
+    queue_mask: jax.Array,  # f32[n_links + 1]
+    *,
+    n_links: int,
+    kmin: float,
+    kmax: float,
+    pmax: float,
+    dt: float,
+    qmax_bytes: float,
+    backend: str = "auto",
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """NIC-tiered hop cascade: same physics as ``cascade`` but exploiting
+    that the N sub-flows of a flow share their first (host_tx) and last
+    (host_rx) hop — those two segment-sums run over flows (O(W)) instead of
+    sub-flows (O(W*N)), and their scale gathers are per flow.
+
+    Returns (arrival[n_links+1], new_queue[n_links+1], p_mark[n_links+1],
+    thr[..., N]).  The flat ``cascade`` stays available as the oracle;
+    tiered vs flat agree to float round-off (summation order differs)."""
+    backend = resolve_backend(backend)
+    if backend == "xla":
+        return _cascade_nic_xla(
+            fab_links, tx_link, rx_link, rates, queue, capacity, queue_mask,
+            n_links=n_links, kmin=kmin, kmax=kmax, pmax=pmax, dt=dt,
+            qmax_bytes=qmax_bytes,
+        )
+    from repro.kernels import linkload as ll
+
+    shape = rates.shape  # [..., N]
+    N = shape[-1]
+    hf = fab_links.shape[-1]
+    arrival_l, newq_l, mark_l, thr = ll.linkload_cascade_tiered(
+        fab_links.reshape(-1, N, hf), tx_link.reshape(-1), rx_link.reshape(-1),
+        rates.reshape(-1, N), queue[:n_links], capacity[:n_links],
+        queue_mask[:n_links], n_links=n_links, kmin=kmin, kmax=kmax,
+        pmax=pmax, dt=dt, qmax_bytes=qmax_bytes,
+        interpret=(backend == "pallas_interpret"),
+    )
+    zero = jnp.zeros((1,), jnp.float32)
+    arrival = jnp.concatenate([arrival_l, zero])
+    new_queue = jnp.concatenate([newq_l, zero])
+    p_mark = jnp.concatenate([mark_l, zero])
+    return arrival, new_queue, p_mark, thr.reshape(shape)
+
+
+def _cascade_nic_xla(fab_links, tx_link, rx_link, rates, queue, capacity,
+                     queue_mask, *, n_links, kmin, kmax, pmax, dt, qmax_bytes):
+    nl = n_links
+    N = rates.shape[-1]
+    hf = fab_links.shape[-1]
+    tx = tx_link.reshape(-1)
+    rx = rx_link.reshape(-1)
+    r = rates.reshape(-1, N)  # [W, N]
+    lid = jnp.where(fab_links >= 0, fab_links, nl)
+
+    # hop 0: host NIC serialization — pre-reduced over the N sub-flows
+    tx_load = jax.ops.segment_sum(r.sum(-1), tx, num_segments=nl + 1)
+    arrival = tx_load.at[nl].set(0.0)
+    scale = jnp.minimum(1.0, capacity / jnp.maximum(tx_load, 1.0))
+    r = r * scale[tx][:, None]
+
+    # fabric hops: per sub-flow (paths differ), flat segment-sum over W*N
+    rf = r.reshape(-1)
+    lidf = lid.reshape(-1, hf)
+    for h in range(hf):
+        lh = lidf[:, h]
+        load_h = jax.ops.segment_sum(rf, lh, num_segments=nl + 1)
+        arrival = arrival + load_h.at[nl].set(0.0)
+        scale_h = jnp.minimum(1.0, capacity / jnp.maximum(load_h, 1.0))
+        rf = rf * scale_h[lh]
+    r = rf.reshape(-1, N)
+
+    # last hop: receiver NIC — pre-reduced again
+    rx_load = jax.ops.segment_sum(r.sum(-1), rx, num_segments=nl + 1)
+    arrival = arrival + rx_load.at[nl].set(0.0)
+    scale = jnp.minimum(1.0, capacity / jnp.maximum(rx_load, 1.0))
+    thr = r * scale[rx][:, None]
+
+    new_queue = jnp.clip(
+        queue + (arrival - capacity) * dt / 8.0, 0.0, qmax_bytes
+    ) * queue_mask
+    ramp = (new_queue - kmin) / (kmax - kmin)
+    p_mark = jnp.where(
+        new_queue < kmin, 0.0, jnp.where(new_queue > kmax, 1.0, ramp * pmax)
+    ).astype(jnp.float32)
+    p_mark = p_mark.at[nl].set(0.0)
+    return arrival, new_queue, p_mark, thr.reshape(rates.shape)
+
+
 def _cascade_xla(links, rates, queue, capacity, queue_mask, *, n_links,
                  kmin, kmax, pmax, dt, qmax_bytes):
     nl = n_links
@@ -126,6 +230,25 @@ def subflow_mark_probs(
     hop_mark = jnp.where(links >= 0, p_mark[lid], 0.0)
     p_sub = 1.0 - jnp.prod(1.0 - hop_mark, axis=-1)
     p_sub_fabric = 1.0 - jnp.prod(1.0 - hop_mark[..., 1:-1], axis=-1)
+    return p_sub, p_sub_fabric
+
+
+def subflow_mark_probs_nic(
+    fab_links: jax.Array,  # i32[..., N, Hf]
+    tx_link: jax.Array,  # i32[...]
+    rx_link: jax.Array,  # i32[...]
+    p_mark: jax.Array,  # f32[n_links + 1]
+    n_links: int,
+) -> tuple[jax.Array, jax.Array]:
+    """NIC-tiered twin of ``subflow_mark_probs``: the host hops are shared
+    by the N sub-flows, so their mark gathers run per flow; only the fabric
+    hops gather per sub-flow.  p_sub_fabric is exactly the fabric product
+    (hops 1..H-2 in the flat layout)."""
+    lid = jnp.where(fab_links >= 0, fab_links, n_links)
+    hop_mark = jnp.where(fab_links >= 0, p_mark[lid], 0.0)
+    p_sub_fabric = 1.0 - jnp.prod(1.0 - hop_mark, axis=-1)  # [..., N]
+    keep = (1.0 - p_mark[tx_link]) * (1.0 - p_mark[rx_link])  # [...]
+    p_sub = 1.0 - keep[..., None] * (1.0 - p_sub_fabric)
     return p_sub, p_sub_fabric
 
 
@@ -176,6 +299,11 @@ def drill_spray(
     """DRILL's per-packet spray on a 2-tier Clos: inverse-queue weights over
     all paths, cascaded host_tx -> uplink -> downlink -> host_rx.
 
+    The per-leaf reductions and gathers run as one-hot matmuls over the
+    (tiny) leaf axis — [n, L] gemms beat XLA:CPU's serial scatter-add on
+    the [n, P] operands by ~2x at DRILL's collapsed-window sizes, and the
+    one-hot gather back is exact (one 1.0 term, L-1 exact +0.0 terms).
+
     Returns (arrival[n_links+1], thr[n] delivered rate before the go-back-N
     penalty, w[n, P] path weights, pq[n, P] per-path queue bytes).
     """
@@ -187,6 +315,8 @@ def drill_spray(
     up0 = 0
     pq = path_queue_2tier(topo, queue, src_leaf, dst_leaf)  # [n, P]
     w = baselines.drill_weights(pq, drill_q0) * active0
+    oh_s = (src_leaf[:, None] == jnp.arange(L_)[None, :]).astype(jnp.float32)
+    oh_d = (dst_leaf[:, None] == jnp.arange(L_)[None, :]).astype(jnp.float32)
     arrival = jnp.zeros((nl + 1,), jnp.float32)
     # hop 0: host NIC
     tx_load = jax.ops.segment_sum(rc0, src, num_segments=topo.n_hosts)
@@ -195,17 +325,17 @@ def drill_spray(
     r0 = rc0 * s_tx  # [n]
     # hop 1: uplinks (per-path split)
     r0w = r0[:, None] * w  # [n, P]
-    up_load = jax.ops.segment_sum(r0w, src_leaf, num_segments=L_)  # [L, P]
+    up_load = oh_s.T @ r0w  # [L, P]
     arrival = arrival.at[up0 : up0 + L_ * S_].add(up_load.reshape(-1))
     cap_up = topo.capacity[up0 : up0 + L_ * S_].reshape(L_, S_)
     s_up = jnp.minimum(1.0, cap_up / jnp.maximum(up_load, 1.0))
-    r1 = r0w * s_up[src_leaf]  # [n, P]
+    r1 = r0w * (oh_s @ s_up)  # [n, P]
     # hop 2: downlinks
-    dn_load = jax.ops.segment_sum(r1, dst_leaf, num_segments=L_)  # [L, P] (by dst)
+    dn_load = oh_d.T @ r1  # [L, P] (by dst)
     arrival = arrival.at[L_ * S_ : 2 * L_ * S_].add(dn_load.T.reshape(-1))
     cap_dn = topo.capacity[L_ * S_ : 2 * L_ * S_].reshape(S_, L_)
     s_dn = jnp.minimum(1.0, cap_dn.T / jnp.maximum(dn_load, 1.0))  # [L, P]
-    r2 = r1 * s_dn[dst_leaf]  # [n, P]
+    r2 = r1 * (oh_d @ s_dn)  # [n, P]
     # hop 3: receiver NIC
     r2sum = jnp.sum(r2, -1)
     rx_load = jax.ops.segment_sum(r2sum, dst, num_segments=topo.n_hosts)

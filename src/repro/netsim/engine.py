@@ -68,10 +68,20 @@ class SimConfig:
     # dataplane backend: "auto" (Pallas on TPU, XLA elsewhere), "xla",
     # "pallas", or "pallas_interpret" (tests) — see netsim/dataplane.py
     dataplane: str = "auto"
+    # compact engine (netsim/compact.py) only: the per-step while_loop runs
+    # in lax.scan chunks of this many steps (early exit checked per chunk)
+    chunk_steps: int = 32
+    # compact engine only: window-average the [T, L, S] uplink trace over
+    # this many steps inside the scan — sweeps that only need sampled
+    # imbalance stats (metrics.throughput_imbalance's sample_every) stop
+    # materializing the full per-step trace.  1 = keep every step (exact
+    # dense-engine layout).
+    uplink_sample_every: int = 1
 
     def __post_init__(self):
         assert self.scheme in SCHEMES, self.scheme
         assert self.dataplane in ("auto", "xla", "pallas", "pallas_interpret")
+        assert self.chunk_steps >= 1 and self.uplink_sample_every >= 1
         if self.scheme != "seqbalance":
             object.__setattr__(self, "n_sub", 1)
 
@@ -162,6 +172,7 @@ def build_sim(topo: Topology, cfg: SimConfig, trace: Trace):
         assert topo.kind == "leaf_spine", f"{cfg.scheme} is 2-tier only (paper §IV.B)"
 
     nl = topo.n_links
+    tx_link, rx_link = topo.nic_links(src, dst)  # i32[F] — path-independent
 
     def init_state() -> SimState:
         return SimState(
@@ -238,9 +249,8 @@ def build_sim(topo: Topology, cfg: SimConfig, trace: Trace):
         # then fabric: a hop's arrivals are the UPSTREAM-scaled rates, so a
         # host can never inject more than its NIC line rate into the fabric).
         # The pipeline lives in netsim/dataplane.py, shared with the
-        # active-window engine and the linkload_cascade Pallas kernel.
-        links = topo.subflow_links(src[:, None], dst[:, None], path)  # [F,N,6]
-
+        # active-window engine and the linkload_cascade Pallas kernels; the
+        # NIC-tiered form pre-reduces the N sub-flows sharing a host NIC.
         if cfg.scheme == "drill":
             arrival, thr, w, pq = dataplane.drill_spray(
                 topo, state.queue, rc[:, 0], src, dst, src_leaf, dst_leaf,
@@ -259,13 +269,16 @@ def build_sim(topo: Topology, cfg: SimConfig, trace: Trace):
             )
             thr = thr[:, None]  # [F,1]
         else:
-            arrival, new_queue, p_mark, thr = dataplane.cascade(
-                links, rc, state.queue, topo.capacity, qmask,
+            fab = topo.fabric_links(src_leaf[:, None], dst_leaf[:, None], path)
+            arrival, new_queue, p_mark, thr = dataplane.cascade_nic(
+                fab, tx_link, rx_link, rc, state.queue, topo.capacity, qmask,
                 n_links=nl, kmin=dparams.kmin_bytes, kmax=dparams.kmax_bytes,
                 pmax=dparams.pmax, dt=cfg.dt, qmax_bytes=cfg.qmax_bytes,
                 backend=cfg.dataplane,
             )
-            p_sub, p_sub_fabric = dataplane.subflow_mark_probs(links, p_mark, nl)
+            p_sub, p_sub_fabric = dataplane.subflow_mark_probs_nic(
+                fab, tx_link, rx_link, p_mark, nl
+            )
 
         # ---------------- transfer progress & CQE ----------------
         delivered = thr * cfg.dt / 8.0  # bytes

@@ -30,14 +30,23 @@ def fct_stats(state: SimState, trace: Trace, topo: Topology, host_bw: float) -> 
     )
 
 
-def throughput_imbalance(outs: StepOutputs, sample_every: int = 10) -> np.ndarray:
+def throughput_imbalance(outs: StepOutputs, sample_every: int = 10, *,
+                         trace_stride: int = 1) -> np.ndarray:
     """Paper's imbalance metric per ToR: (max uplink tput - min)/avg, sampled
     every ``sample_every`` steps (=100 us at dt=10 us).  Returns the flat
     sample population (for CDF plotting).  ToR/sample points with zero
-    traffic are dropped."""
-    up = np.asarray(outs.uplink_load)  # [T, L, S]
-    T = (up.shape[0] // sample_every) * sample_every
-    up = up[:T].reshape(-1, sample_every, *up.shape[1:]).mean(axis=1)  # [T', L, S]
+    traffic are dropped.
+
+    ``trace_stride`` is the window-averaging the engine already applied to
+    ``outs.uplink_load`` (``SimConfig.uplink_sample_every``); the remaining
+    averaging window here is ``sample_every // trace_stride``."""
+    assert sample_every % max(trace_stride, 1) == 0, (
+        f"engine stride {trace_stride} must divide sample_every "
+        f"{sample_every} or the imbalance windows silently shift")
+    up = np.asarray(outs.uplink_load)  # [T / trace_stride, L, S]
+    k = max(1, sample_every // max(trace_stride, 1))
+    T = (up.shape[0] // k) * k
+    up = up[:T].reshape(-1, k, *up.shape[1:]).mean(axis=1)  # [T', L, S]
     avg = up.mean(axis=-1)
     imb = (up.max(axis=-1) - up.min(axis=-1)) / np.maximum(avg, 1e-9)
     return imb[avg > 1e6].ravel()
@@ -59,9 +68,15 @@ def congestion_packet_bandwidth(state: SimState, duration_s: float,
 
 
 def port_rate_timeseries(outs: StepOutputs, leaf: int, dt: float,
-                         window_s: float = 1e-3) -> np.ndarray:
-    """Per-uplink offered rate for one leaf, window-averaged (Fig. 10/11)."""
-    up = np.asarray(outs.uplink_load)[:, leaf, :]  # [T, S]
-    k = max(1, int(window_s / dt))
+                         window_s: float = 1e-3, *,
+                         trace_stride: int = 1) -> np.ndarray:
+    """Per-uplink offered rate for one leaf, window-averaged (Fig. 10/11).
+    ``trace_stride`` = window-averaging already applied by the engine."""
+    steps = int(window_s / dt)
+    assert steps % max(trace_stride, 1) == 0, (
+        f"engine stride {trace_stride} must divide the {steps}-step window "
+        f"or the rate windows silently shift")
+    up = np.asarray(outs.uplink_load)[:, leaf, :]  # [T / trace_stride, S]
+    k = max(1, steps // max(trace_stride, 1))
     T = (up.shape[0] // k) * k
     return up[:T].reshape(-1, k, up.shape[1]).mean(axis=1)

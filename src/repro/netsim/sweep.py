@@ -9,23 +9,34 @@ per sim.  This runner instead:
   * pads every trace to a shape bucket (``F`` to multiples of 2048, the
     active window ``W`` to multiples of 256, shared across the batch) so
     shapes — and therefore compilations — are reused;
-  * stacks the traces and runs ONE jitted ``vmap`` of the compact engine's
-    scan per (scheme, topology, shape) static combination, with the
-    ``[B, F_pad]`` +inf finish buffer donated (the one state buffer big
+  * runs each shape bucket through ONE compiled program — on cpu a B=1
+    program executed per sim (own early exit + gated admission; see
+    ``batch_mode``), on accelerators one jitted ``vmap`` over the stacked
+    batch — with the +inf finish buffer donated (the one state buffer big
     enough to matter; the trace arrays are kept — the retry loop re-reads
     them);
   * memoizes compiled executables in a cache keyed on those statics
     (topology keyed by VALUE — kind/sizes/capacities — so two structurally
-    identical Topology instances share one compilation).
+    identical Topology instances share one compilation);
+  * when more than one local device is present, pads the batch to the
+    device count and dispatches it as ONE pmap-of-vmap (one shard of the
+    batch per device); the single-device path is untouched and stays
+    bit-identical;
+  * points JAX's persistent compilation cache at a scratch dir
+    (``enable_compile_cache``): sweeps relaunch the same programs every
+    process, so from the second process on the several-seconds-per-program
+    XLA compiles are disk hits.
 
 ``run_batch`` is the workhorse; ``run_one`` is the single-trace
-convenience wrapper used by benchmarks/common.run_sim.
+convenience wrapper used by benchmarks/common.run_sim.  ``run_jobs``
+worker count comes from REPRO_SWEEP_WORKERS (default: capped cpu count).
 """
 from __future__ import annotations
 
 import functools
 import hashlib
 import os
+import threading
 import time
 
 import jax
@@ -41,6 +52,50 @@ F_BUCKET = 2048
 W_BUCKET = 256
 
 _JIT_CACHE: dict = {}
+_COMPILE_CACHE_SET = False
+_COMPILE_CACHE_LOCK = threading.Lock()
+
+
+def enable_compile_cache() -> str | None:
+    """Point JAX's persistent compilation cache at REPRO_COMPILE_CACHE
+    (default: a per-user dir under $TMPDIR).  Paper sweeps re-launch the
+    same (scheme, topology, shape) programs in every process — several
+    seconds of XLA compile each — so the second process onward starts
+    warm.  Set REPRO_COMPILE_CACHE=0 to disable.  Returns the dir in use
+    (None when disabled).  Idempotent; called lazily by run_batch."""
+    global _COMPILE_CACHE_SET
+    try:  # never clobber a cache dir the user configured themselves
+        configured = jax.config.jax_compilation_cache_dir
+    except AttributeError:
+        return None
+    if configured:
+        return configured
+    path = os.environ.get("REPRO_COMPILE_CACHE")
+    if path is None:
+        import tempfile
+
+        uid = os.getuid() if hasattr(os, "getuid") else "user"
+        path = os.path.join(tempfile.gettempdir(), f"repro-xla-cache-{uid}")
+    if path in ("", "0"):
+        return None
+    with _COMPILE_CACHE_LOCK:  # run_jobs calls this from worker threads
+        if not _COMPILE_CACHE_SET:
+            try:
+                jax.config.update("jax_compilation_cache_dir", path)
+                jax.config.update(
+                    "jax_persistent_cache_min_compile_time_secs", 0.5)
+                jax.config.update(
+                    "jax_persistent_cache_min_entry_size_bytes", 0)
+                # the cache module latches "no dir configured" on the first
+                # compile of the process (e.g. a jnp op at import time) and
+                # never re-reads the config — reset so the dir takes effect
+                from jax._src import compilation_cache as _cc
+
+                _cc.reset_cache()
+            except Exception:  # very old jax: feature is best-effort
+                return None
+            _COMPILE_CACHE_SET = True
+    return path
 
 
 def clear_cache() -> None:
@@ -72,13 +127,68 @@ def _f_bucket(F: int) -> int:
     return b
 
 
+def _gated_b1(topo: Topology, cfg: SimConfig, W: int, F_pad: int, A: int,
+              n_steps: int):
+    """Single-sim callable over [1, ...]-leading inputs: no vmap wrapper,
+    and the admission block gated behind a REAL lax.cond branch (vmap
+    would lower it to both-branches + select) — once arrivals drain (3/4
+    of the horizon on paper traces) the O(W) admission work is skipped
+    outright.  Shared by the plain B=1 and the one-sim-per-device pmap
+    dispatches."""
+    core = functools.partial(compact.run_core, topo, cfg, W, F_pad, A,
+                             n_steps, gate_admission=True)
+
+    def fn_one(trace_arrays, finish0):
+        squeeze = lambda a: jnp.squeeze(a, 0)
+        out = core(jax.tree.map(squeeze, trace_arrays),
+                   jnp.squeeze(finish0, 0))
+        return jax.tree.map(lambda a: a[None], out)
+
+    return fn_one
+
+
 def _compiled(topo: Topology, cfg: SimConfig, W: int, F_pad: int, A: int,
               n_steps: int, batch: int):
     key = (_topo_key(topo), cfg, W, F_pad, A, n_steps, batch)
     fn = _JIT_CACHE.get(key)
     if fn is None:
-        core = functools.partial(compact.run_core, topo, cfg, W, F_pad, A, n_steps)
-        fn = jax.jit(jax.vmap(core), donate_argnums=(1,))
+        if batch == 1:
+            fn = jax.jit(_gated_b1(topo, cfg, W, F_pad, A, n_steps),
+                         donate_argnums=(1,))
+        else:
+            core = functools.partial(compact.run_core, topo, cfg, W, F_pad,
+                                     A, n_steps)
+            fn = jax.jit(jax.vmap(core), donate_argnums=(1,))
+        _JIT_CACHE[key] = fn
+    return fn
+
+
+def sweep_devices() -> int:
+    """Local devices the sweep runner will shard batches over.  Override
+    with REPRO_SWEEP_DEVICES (e.g. 1 to force the plain vmap path)."""
+    env = os.environ.get("REPRO_SWEEP_DEVICES")
+    n = int(env) if env else jax.local_device_count()
+    return max(1, min(n, jax.local_device_count()))
+
+
+def _compiled_sharded(topo: Topology, cfg: SimConfig, W: int, F_pad: int,
+                      A: int, n_steps: int, per_dev: int, n_dev: int):
+    """pmap-of-vmap executable: inputs carry a leading [n_dev, per_dev]
+    batch, one shard per local device.  Each shard runs the identical
+    vmapped compact scan, so per-sim results match the single-device path
+    (same program, same shapes — only the dispatch is parallel)."""
+    key = (_topo_key(topo), cfg, W, F_pad, A, n_steps, per_dev, n_dev, "pmap")
+    fn = _JIT_CACHE.get(key)
+    if fn is None:
+        if per_dev == 1:
+            # one sim per device: same gated, vmap-free core as the plain
+            # batch==1 path
+            inner = _gated_b1(topo, cfg, W, F_pad, A, n_steps)
+        else:
+            inner = jax.vmap(functools.partial(
+                compact.run_core, topo, cfg, W, F_pad, A, n_steps))
+        fn = jax.pmap(inner, devices=jax.local_devices()[:n_dev],
+                      donate_argnums=(1,))
         _JIT_CACHE[key] = fn
     return fn
 
@@ -133,6 +243,60 @@ def _observed_concurrency(prepped, finish, horizon_s: float) -> int:
     return worst
 
 
+def batch_mode() -> str:
+    """How a single-device batch is dispatched: "persim" runs each trace
+    through the (shared, cached) B=1 executable — on XLA:CPU that wins
+    roughly 2x over one vmap: each sim keeps its own early exit instead of
+    running to the batch's slowest, and the admission block is a real
+    gated branch.  "vmap" restores the one-program-per-bucket batch (the
+    right choice on accelerators with idle lanes).  Default: persim on
+    cpu, vmap elsewhere; override with REPRO_SWEEP_BATCH."""
+    mode = os.environ.get("REPRO_SWEEP_BATCH", "auto")
+    if mode in ("persim", "vmap"):
+        return mode
+    return "persim" if jax.default_backend() == "cpu" else "vmap"
+
+
+def _dispatch(topo, cfg, W, F_pad, A, n_steps, stacked, B):
+    """Run a stacked [B, ...] batch, returning (finish, cnp, spill, outs)
+    with a leading [B] axis.  >1 local device: pad B up to a multiple of
+    the device count (duplicating the last row — padding results are
+    sliced off) and run one pmap-of-vmap, one batch shard per device.
+    Single device: per-sim B=1 executions (cpu) or one jitted vmap — see
+    ``batch_mode``."""
+    D = sweep_devices()
+    if D > 1 and B > 1:
+        D = min(D, B)
+        Bp = -(-B // D) * D
+        if Bp > B:
+            stacked = tuple(
+                np.concatenate([a, np.repeat(a[-1:], Bp - B, axis=0)])
+                for a in stacked
+            )
+        per = Bp // D
+        shaped = tuple(
+            jnp.asarray(a.reshape((D, per) + a.shape[1:])) for a in stacked
+        )
+        fn = _compiled_sharded(topo, cfg, W, F_pad, A, n_steps, per, D)
+        finish0 = jnp.full((D, per, F_pad), jnp.inf, jnp.float32)
+        out = fn(shaped, finish0)
+        return jax.tree.map(
+            lambda a: jnp.reshape(a, (Bp,) + a.shape[2:])[:B], out
+        )
+    if B > 1 and batch_mode() == "persim":
+        # every sim in the bucket shares (W, F_pad, A) -> ONE compiled B=1
+        # program serves the whole loop
+        parts = [
+            _dispatch(topo, cfg, W, F_pad, A, n_steps,
+                      tuple(a[i:i + 1] for a in stacked), 1)
+            for i in range(B)
+        ]
+        return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *parts)
+    fn = _compiled(topo, cfg, W, F_pad, A, n_steps, B)
+    finish0 = jnp.full((B, F_pad), jnp.inf, jnp.float32)
+    return fn(tuple(jnp.asarray(a) for a in stacked), finish0)
+
+
 def _run_group(topo, cfg, prepped, n_steps, window_slots):
     """One vmapped run over traces sharing an F_pad bucket, with the
     spill-retry loop: the concurrency bound is a heuristic, so any sim that
@@ -157,13 +321,11 @@ def _run_group(topo, cfg, prepped, n_steps, window_slots):
     pending = list(range(len(prepped)))
     while pending:
         stacked = tuple(
-            jnp.asarray(np.stack([padded[i][k] for i in pending]))
-            for k in range(6)
+            np.stack([padded[i][k] for i in pending]) for k in range(6)
         )
         t0 = time.time()
-        fn = _compiled(topo, cfg, W, F_pad, A, n_steps, len(pending))
-        finish0 = jnp.full((len(pending), F_pad), jnp.inf, jnp.float32)
-        finish, cnp, spill, outs = fn(stacked, finish0)
+        finish, cnp, spill, outs = _dispatch(
+            topo, cfg, W, F_pad, A, n_steps, stacked, len(pending))
         spill = np.asarray(spill)
         finish = np.asarray(finish)
         cnp = np.asarray(cnp)
@@ -204,6 +366,7 @@ def run_batch(
     donated, cached-compile computations — one per F_pad shape bucket, so a
     small trace is never padded to a 30x larger sibling's shape."""
     assert traces, "empty sweep"
+    enable_compile_cache()
     prepped = [compact.sort_trace(t) for t in traces]
     n_steps = int(round(cfg.duration_s / cfg.dt))
     groups: dict[int, list[int]] = {}
@@ -226,6 +389,15 @@ def run_one(topo: Topology, cfg: SimConfig, trace: Trace, *,
     return results[0], outs[0]
 
 
+def default_workers(n_jobs: int) -> int:
+    """run_jobs worker count: REPRO_SWEEP_WORKERS if set (>=1), else
+    ``os.cpu_count()`` capped at the job count."""
+    env = os.environ.get("REPRO_SWEEP_WORKERS")
+    if env:
+        return max(1, min(int(env), max(n_jobs, 1)))
+    return max(1, min(n_jobs, os.cpu_count() or 1))
+
+
 def run_jobs(
     jobs: list[tuple[Topology, SimConfig, list[Trace]]],
     *,
@@ -236,11 +408,15 @@ def run_jobs(
     XLA's CPU executables release the GIL, so a small thread pool overlaps
     independent compiles and scans across cores — the five-scheme Fig. 12
     sweep is embarrassingly parallel at this level.  Results are returned
-    in job order, identical to serial execution."""
+    in job order, identical to serial execution.
+
+    Worker count resolution: explicit ``workers`` argument, else the
+    REPRO_SWEEP_WORKERS env var, else a capped ``os.cpu_count()``."""
     import concurrent.futures as cf
 
+    enable_compile_cache()  # once, before worker threads race to compile
     if workers is None:
-        workers = max(1, min(len(jobs), os.cpu_count() or 1))
+        workers = default_workers(len(jobs))
     if workers == 1 or len(jobs) == 1:
         return [run_batch(t, c, tr) for (t, c, tr) in jobs]
     with cf.ThreadPoolExecutor(max_workers=workers) as pool:

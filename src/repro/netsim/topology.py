@@ -44,6 +44,16 @@ class Topology:  # instance can be a jit static argument (fields hold arrays)
     capacity: jax.Array  # f32[n_links + 1] bps; last slot = dummy sink for -1
     # f(src_host, dst_host, path) -> int32[..., MAX_HOPS] link ids (-1 pad)
     subflow_links: Callable
+    # NIC-tiered view of the same hop vector (dataplane.cascade_nic): every
+    # sub-flow of a flow shares its first (host_tx) and last (host_rx) hop,
+    # and the fabric hops depend only on (src_leaf, dst_leaf, path) — so the
+    # NIC hops can be pre-reduced over N and the fabric hops rebuilt without
+    # touching host ids.
+    # f(src_host, dst_host) -> (tx i32[...], rx i32[...])
+    nic_links: Callable
+    # f(src_leaf, dst_leaf, path) -> i32[..., n_fabric_hops] (-1 = absent)
+    fabric_links: Callable
+    n_fabric_hops: int
     # fabric-only view used for congestion metrics / imbalance:
     uplink_ids: np.ndarray  # int32[n_leaf, n_uplinks] — ToR uplink link ids
     base_rtt_s: float
@@ -91,20 +101,30 @@ def leaf_spine(
 
     up0, dn0, tx0, rx0 = 0, L * S, 2 * L * S, 2 * L * S + H
 
+    def nic_links(src_host, dst_host):
+        tx = jnp.asarray(tx0 + src_host, jnp.int32)
+        rx = jnp.asarray(rx0 + dst_host, jnp.int32)
+        return jnp.broadcast_arrays(tx, rx)
+
+    def fabric_links(src_leaf, dst_leaf, path):
+        shp = jnp.broadcast_shapes(jnp.shape(src_leaf), jnp.shape(dst_leaf), jnp.shape(path))
+        src_leaf, dst_leaf, path = (jnp.broadcast_to(a, shp) for a in (src_leaf, dst_leaf, path))
+        inter = src_leaf != dst_leaf
+        up = jnp.where(inter, up0 + src_leaf * S + path, -1)
+        dn = jnp.where(inter, dn0 + path * L + dst_leaf, -1)
+        return jnp.stack([up, dn], axis=-1).astype(jnp.int32)
+
     def subflow_links(src_host, dst_host, path):
         # 4 real hops (no -1 padding columns): the dataplane cascade cost is
         # linear in the hop count, so 2-tier flows carry a [.., 4] hop
         # vector while three_tier keeps the full MAX_HOPS = 6.
         shp = jnp.broadcast_shapes(jnp.shape(src_host), jnp.shape(dst_host), jnp.shape(path))
         src_host, dst_host, path = (jnp.broadcast_to(a, shp) for a in (src_host, dst_host, path))
-        src_leaf = src_host // hosts_per_leaf
-        dst_leaf = dst_host // hosts_per_leaf
-        inter = src_leaf != dst_leaf
-        up = jnp.where(inter, up0 + src_leaf * S + path, -1)
-        dn = jnp.where(inter, dn0 + path * L + dst_leaf, -1)
-        tx = tx0 + src_host
-        rx = rx0 + dst_host
-        return jnp.stack([tx, up, dn, rx], axis=-1).astype(jnp.int32)
+        tx, rx = nic_links(src_host, dst_host)
+        fab = fabric_links(src_host // hosts_per_leaf, dst_host // hosts_per_leaf, path)
+        return jnp.concatenate(
+            [tx[..., None], fab, rx[..., None]], axis=-1
+        ).astype(jnp.int32)
 
     uplink_ids = (np.arange(L)[:, None] * S + np.arange(S)[None, :]).astype(np.int32)
 
@@ -124,6 +144,9 @@ def leaf_spine(
         n_links=n_links,
         capacity=jnp.asarray(cap),
         subflow_links=subflow_links,
+        nic_links=nic_links,
+        fabric_links=fabric_links,
+        n_fabric_hops=2,
         uplink_ids=uplink_ids,
         base_rtt_s=base_rtt_s,
         path_link_table=plt,
@@ -166,11 +189,14 @@ def three_tier(
     cap[-1] = np.float32(1e30)
     cap = _apply_overrides(cap, capacity_overrides)
 
-    def subflow_links(src_host, dst_host, path):
-        shp = jnp.broadcast_shapes(jnp.shape(src_host), jnp.shape(dst_host), jnp.shape(path))
-        src_host, dst_host, path = (jnp.broadcast_to(a, shp) for a in (src_host, dst_host, path))
-        src_tor = src_host // hosts_per_tor
-        dst_tor = dst_host // hosts_per_tor
+    def nic_links(src_host, dst_host):
+        tx = jnp.asarray(tx0 + src_host, jnp.int32)
+        rx = jnp.asarray(rx0 + dst_host, jnp.int32)
+        return jnp.broadcast_arrays(tx, rx)
+
+    def fabric_links(src_tor, dst_tor, path):
+        shp = jnp.broadcast_shapes(jnp.shape(src_tor), jnp.shape(dst_tor), jnp.shape(path))
+        src_tor, dst_tor, path = (jnp.broadcast_to(a, shp) for a in (src_tor, dst_tor, path))
         inter = src_tor != dst_tor
         agg = path // C
         core = path % C
@@ -178,9 +204,16 @@ def three_tier(
         up2 = jnp.where(inter, ac0 + agg * C + core, -1)
         dn1 = jnp.where(inter, ca0 + core * A + agg, -1)
         dn2 = jnp.where(inter, at0 + agg * T + dst_tor, -1)
-        tx = tx0 + src_host
-        rx = rx0 + dst_host
-        return jnp.stack([tx, up1, up2, dn1, dn2, rx], axis=-1).astype(jnp.int32)
+        return jnp.stack([up1, up2, dn1, dn2], axis=-1).astype(jnp.int32)
+
+    def subflow_links(src_host, dst_host, path):
+        shp = jnp.broadcast_shapes(jnp.shape(src_host), jnp.shape(dst_host), jnp.shape(path))
+        src_host, dst_host, path = (jnp.broadcast_to(a, shp) for a in (src_host, dst_host, path))
+        tx, rx = nic_links(src_host, dst_host)
+        fab = fabric_links(src_host // hosts_per_tor, dst_host // hosts_per_tor, path)
+        return jnp.concatenate(
+            [tx[..., None], fab, rx[..., None]], axis=-1
+        ).astype(jnp.int32)
 
     uplink_ids = (np.arange(T)[:, None] * A + np.arange(A)[None, :]).astype(np.int32)
 
@@ -195,6 +228,9 @@ def three_tier(
         n_links=n_links,
         capacity=jnp.asarray(cap),
         subflow_links=subflow_links,
+        nic_links=nic_links,
+        fabric_links=fabric_links,
+        n_fabric_hops=4,
         uplink_ids=uplink_ids,
         base_rtt_s=base_rtt_s,
         path_link_table=plt,
