@@ -8,7 +8,7 @@ import subprocess
 import sys
 import textwrap
 
-from benchmarks.common import emit
+from benchmarks.common import PERF, emit
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
@@ -45,7 +45,10 @@ def bench_collectives(fast=True):
         r = subprocess.run([sys.executable, "-c", _CODE % wire], capture_output=True,
                            text=True, env=env, timeout=600)
         if r.returncode != 0:
-            emit(f"collectives_{wire}", 0.0, "FAILED_" + r.stderr.strip().splitlines()[-1][:80])
+            # a crashed subprocess may die before writing anything to stderr
+            err_lines = r.stderr.strip().splitlines()
+            why = err_lines[-1][:80] if err_lines else f"exit_{r.returncode}_no_stderr"
+            emit(f"collectives_{wire}", 0.0, "FAILED_" + why)
             continue
         res = json.loads(r.stdout.strip().splitlines()[-1])
         sb, bl = res["seqbalance"], res["baseline"]
@@ -56,3 +59,10 @@ def bench_collectives(fast=True):
         if bl["total"]:
             emit(f"collectives_byte_ratio_{wire}", 0.0,
                  f"seq/base_{sb['total']/bl['total']:.2f}")
+        # machine-readable record for BENCH_netsim.json (counts/bytes only —
+        # the CI gate stays timing-free for this bench)
+        PERF.setdefault("collectives", {})[wire] = {
+            "seqbalance_ops": sb["count"], "seqbalance_bytes": sb["total"],
+            "baseline_ops": bl["count"], "baseline_bytes": bl["total"],
+            "byte_ratio": (sb["total"] / bl["total"]) if bl["total"] else None,
+        }

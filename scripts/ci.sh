@@ -6,6 +6,15 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 python -m pytest -x -q
 
+# dist layer under a forced 8-device host platform: re-runs the planning /
+# sharding / co-sim tests with the sweep runner actually sharding over 8
+# local devices (the pmap-of-vmap dispatch path).  The subprocess-based
+# collective tests pin their own child XLA_FLAGS, so rerunning them here
+# would add compile minutes for zero new coverage — deselect them.
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+  python -m pytest -x -q tests/test_collectives.py tests/test_system.py \
+  tests/test_dist_extra.py -k "not equals_psum and not across_mesh_sizes"
+
 # bench_fig10 fast mode: exercises trace generation, the sweep runner, the
 # compact engine, and the metrics layer end to end in under a minute.
 python -m benchmarks.run --only fig10 --json /tmp/BENCH_smoke.json

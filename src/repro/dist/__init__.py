@@ -1,0 +1,20 @@
+"""repro.dist — the training-side counterpart of the netsim fabric model.
+
+SeqBalance's motivating traffic mode is AI training: a handful of huge,
+synchronized grad-sync collectives that ECMP cannot spread and that must
+not reorder.  This package supplies that side of the reproduction:
+
+  * ``collectives`` — PathPlan + the chunked, multipath, bidirectional ring
+    all-reduce (the Shaper's N-sub-flow idea applied to grad sync);
+  * ``sharding``    — FSDP+TP parameter/batch/cache partition rules for the
+    production 16x16 (and 2x16x16 multi-pod) meshes;
+  * ``elastic``     — phi-window path quarantine (LinkHealth), pod-failure
+    remesh planning and the straggler watchdog;
+  * ``netfeed``     — the netsim co-simulation loop: PathPlan -> ring-trace
+    workload -> fluid sim -> per-path congestion -> LinkHealth -> new plan.
+
+Importing the package installs the jax 0.4.x forward-compat shims
+(``_compat``) so the modern sharding API the modules are written against
+resolves on the pinned toolchain.
+"""
+from repro.dist import _compat  # noqa: F401  (installs jax API shims)

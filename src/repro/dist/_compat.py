@@ -1,0 +1,94 @@
+"""Forward-compat shims: the dist layer (and the seed's system tests) are
+written against the modern JAX sharding surface — ``jax.shard_map`` with
+``axis_names=``/``check_vma=``, ``jax.make_mesh(..., axis_types=...)``,
+``jax.sharding.AxisType`` and the two-argument ``AbstractMesh`` — while the
+pinned toolchain ships jax 0.4.37, where the same machinery lives under
+``jax.experimental.shard_map`` with the older ``auto=``/``check_rep=``
+spelling.
+
+Importing this module (``repro.dist`` does it on package import) installs
+thin adapters into the ``jax`` namespace so the SAME source runs on both
+generations.  Every patch is gated on ``hasattr``: on a modern JAX this
+module is a no-op, and the adapters always delegate to the real
+implementation — no behavior is re-implemented here.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+import jax
+
+
+class _AxisType(enum.Enum):
+    """Stand-in for jax.sharding.AxisType (mesh axes are implicitly Auto on
+    0.4.x, so the annotation is accepted and dropped)."""
+
+    Auto = "auto"
+    Explicit = "explicit"
+    Manual = "manual"
+
+
+def _install() -> None:
+    if not hasattr(jax.sharding, "AxisType"):
+        jax.sharding.AxisType = _AxisType
+
+    # --- jax.make_mesh(..., axis_types=...) --------------------------------
+    # signature probes only: building a probe mesh would initialize the
+    # backend at import time, which launch/mesh.py promises not to do
+    if "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+        _make_mesh = jax.make_mesh
+
+        @functools.wraps(_make_mesh)
+        def make_mesh(axis_shapes, axis_names, *, devices=None, axis_types=None):
+            del axis_types  # implicit on 0.4.x
+            return _make_mesh(axis_shapes, axis_names, devices=devices)
+
+        jax.make_mesh = make_mesh
+
+    # --- two-argument AbstractMesh -----------------------------------------
+    _AbstractMesh = jax.sharding.AbstractMesh
+    if "shape_tuple" in inspect.signature(_AbstractMesh.__init__).parameters:
+
+        @functools.wraps(_AbstractMesh, updated=())
+        def AbstractMesh(axis_shapes, axis_names=None, *, axis_types=None):
+            del axis_types
+            if axis_names is None:  # old-style ((name, size), ...) call
+                return _AbstractMesh(tuple(axis_shapes))
+            return _AbstractMesh(tuple(zip(axis_names, axis_shapes)))
+
+        jax.sharding.AbstractMesh = AbstractMesh
+
+    # --- jax.shard_map ------------------------------------------------------
+    if not hasattr(jax, "shard_map"):
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        def shard_map(f, mesh=None, in_specs=None, out_specs=None, *,
+                      axis_names=None, check_vma=None, check_rep=None,
+                      auto=None):
+            if auto is None:
+                if axis_names is None:
+                    auto = frozenset()
+                else:  # partial-manual: axes NOT named stay automatic
+                    auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+            check = True if check_vma is None else check_vma
+            if check_rep is not None:
+                check = check_rep
+            return _shard_map(f, mesh, in_specs=in_specs, out_specs=out_specs,
+                              check_rep=check, auto=frozenset(auto))
+
+        shard_map.is_legacy_shim = True  # callers can gate partial-manual use
+        jax.shard_map = shard_map
+
+    # --- jax.lax.axis_size --------------------------------------------------
+    if not hasattr(jax.lax, "axis_size"):
+        def axis_size(axis_name):
+            # psum of a unit literal constant-folds to the (static) size of
+            # the named axis inside shard_map/pmap tracing contexts.
+            return jax.lax.psum(1, axis_name)
+
+        jax.lax.axis_size = axis_size
+
+
+_install()

@@ -1,0 +1,184 @@
+"""SeqBalance multipath collective engine (paper §III applied to grad sync).
+
+The paper's Shaper splits one elephant WQE into N sub-flows on distinct
+QPs so the fabric can spread them over N paths with no reordering inside
+any one of them.  ``seqbalance_all_reduce`` is the same idea one layer up:
+the gradient bucket is cut into ``n_chunks`` chunks and each chunk runs its
+OWN ring all-reduce (reduce-scatter + all-gather over ``lax.ppermute``)
+whose ring *direction* is the chunk's path.  A congestion-quarantined path
+(``PathPlan.inactive``, fed by ``dist.elastic.LinkHealth`` /
+``dist.netfeed``) is simply skipped by the round-robin chunk->path map —
+in-flight chunks never migrate, mirroring the paper's
+"placed sub-flows never move" no-reordering rule.
+
+Wire dtype is orthogonal: chunks can cross the fabric as float32,
+bfloat16, or int8 (per-segment absmax scale), with accumulation always in
+float32.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import _compat  # noqa: F401  (jax API shims)
+
+
+@dataclasses.dataclass(frozen=True)
+class PathPlan:
+    """Static multipath plan for one collective.
+
+    ``directions`` holds one ring direction (+1 / -1) per available path;
+    ``inactive`` flags paths currently quarantined by congestion feedback.
+    The plan is a *static* (hashable) argument: a new plan means a new
+    compile, which is the point — path changes happen between steps, never
+    inside one (no reordering).
+    """
+
+    n_chunks: int = 4
+    directions: tuple[int, ...] = (1, -1)
+    inactive: tuple[bool, ...] | None = None
+    wire_dtype: str = "float32"
+
+    def __post_init__(self):
+        assert self.n_chunks >= 1
+        assert all(d in (1, -1) for d in self.directions), self.directions
+        if self.inactive is None:
+            object.__setattr__(self, "inactive", (False,) * len(self.directions))
+        assert len(self.inactive) == len(self.directions)
+        assert self.wire_dtype in ("float32", "bfloat16", "int8"), self.wire_dtype
+
+    @property
+    def n_paths(self) -> int:
+        return len(self.directions)
+
+    def chunk_paths(self) -> tuple[int, ...]:
+        """Round-robin chunk -> path assignment over the active paths.
+
+        When every path is quarantined the table carries no routing signal
+        (the paper: traffic must still flow) — fall back to the primary
+        path rather than stalling the collective.
+        """
+        active = [p for p, dead in enumerate(self.inactive) if not dead]
+        if not active:
+            active = [0]
+        return tuple(active[c % len(active)] for c in range(self.n_chunks))
+
+
+# ------------------------------------------------------------- wire dtypes
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Absmax int8 quantization: returns (q int8, scale f32 scalar) with
+    x ~= q * scale and |x - q*scale| <= scale/2 (round-to-nearest)."""
+    scale = jnp.max(jnp.abs(x)).astype(jnp.float32) / 127.0
+    scale = jnp.maximum(scale, jnp.float32(1e-30))
+    q = jnp.clip(jnp.round(x / scale), -127.0, 127.0).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def _encode(x, wire: str):
+    if wire == "bfloat16":
+        # ship the raw bf16 bits: bitcasting to uint16 pins the 2-byte wire
+        # format in the lowered HLO (a plain astype round-trip gets hoisted
+        # across the ppermute by XLA's simplifier, silently widening the
+        # wire back to 4 bytes)
+        return jax.lax.bitcast_convert_type(x.astype(jnp.bfloat16), jnp.uint16)
+    if wire == "int8":
+        return quantize_int8(x)
+    return x
+
+
+def _decode(y, wire: str):
+    if wire == "bfloat16":
+        return jax.lax.bitcast_convert_type(y, jnp.bfloat16).astype(jnp.float32)
+    if wire == "int8":
+        return dequantize_int8(*y)
+    return y
+
+
+def _permute(payload, axis_name, perm):
+    return jax.tree.map(lambda a: jax.lax.ppermute(a, axis_name, perm), payload)
+
+
+# ------------------------------------------------------------ ring engine
+def _ring_all_reduce(v: jax.Array, axis_name: str, d: int, n: int, wire: str):
+    """One chunk's ring all-reduce.  ``v`` is f32[n, seg] (one segment per
+    ring member); direction ``d`` is the chunk's path.  2*(n-1) ppermute
+    rounds: reduce-scatter then all-gather, exactly the bandwidth-optimal
+    schedule the fabric sees as one long-lived flow per neighbor pair."""
+    if n == 1:
+        return v
+    i = jax.lax.axis_index(axis_name)
+    perm = [(src, (src + d) % n) for src in range(n)]
+
+    def seg(arr, idx):
+        return jax.lax.dynamic_index_in_dim(arr, idx % n, axis=0, keepdims=False)
+
+    def put(arr, val, idx):
+        return jax.lax.dynamic_update_index_in_dim(arr, val, idx % n, axis=0)
+
+    # reduce-scatter: after step s, device i holds the partial sum of s+1
+    # contributions in segment (i - (s+1)*d); after n-1 steps its segment
+    # (i + d) is fully reduced.
+    for s in range(n - 1):
+        send = seg(v, i - s * d)
+        recv = _decode(_permute(_encode(send, wire), axis_name, perm), wire)
+        ridx = i - (s + 1) * d
+        v = put(v, seg(v, ridx) + recv, ridx)
+
+    # all-gather: circulate the reduced segments the opposite way around
+    # the same ring (send what you last received).
+    for s in range(n - 1):
+        send = seg(v, i + d - s * d)
+        recv = _decode(_permute(_encode(send, wire), axis_name, perm), wire)
+        v = put(v, recv, i - s * d)
+    return v
+
+
+def seqbalance_all_reduce(x: jax.Array, axis_name: str, plan: PathPlan | None = None):
+    """Multipath chunked ring all-reduce of ``x`` over ``axis_name``.
+
+    Must be called inside ``shard_map`` (manual over ``axis_name``).
+    Returns the full sum with ``x``'s shape and dtype; equals
+    ``lax.psum(x, axis_name)`` up to wire-dtype rounding.
+    """
+    plan = PathPlan() if plan is None else plan
+    n = jax.lax.axis_size(axis_name)
+    shape, dtype = x.shape, x.dtype
+    flat = x.astype(jnp.float32).reshape(-1)
+    m = flat.size
+    c = plan.n_chunks
+    seg = -(-max(m, 1) // (c * n))
+    flat = jnp.pad(flat, (0, c * n * seg - m))
+    chunks = flat.reshape(c, n, seg)
+    paths = plan.chunk_paths()
+    reduced = [
+        _ring_all_reduce(chunks[k], axis_name, int(plan.directions[paths[k]]),
+                         int(n), plan.wire_dtype)
+        for k in range(c)
+    ]
+    out = jnp.stack(reduced).reshape(-1)[:m].reshape(shape)
+    return out.astype(dtype)
+
+
+# ----------------------------------------------------------- conveniences
+def baseline_all_reduce(x: jax.Array, axis_name: str) -> jax.Array:
+    """Stock XLA all-reduce — the single-path elephant flow the paper's
+    motivation describes (one fat all-reduce per gradient)."""
+    return jax.lax.psum(x, axis_name)
+
+
+def tree_all_reduce_mean(tree, axis_name: str, plan: PathPlan | None = None):
+    """Grad sync: SeqBalance all-reduce each leaf, then divide by the axis
+    size (data-parallel mean)."""
+    n = jax.lax.axis_size(axis_name)
+
+    def one(g):
+        s = seqbalance_all_reduce(g, axis_name, plan)
+        return (s.astype(jnp.float32) / n).astype(g.dtype)
+
+    return jax.tree.map(one, tree)

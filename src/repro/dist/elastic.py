@@ -1,0 +1,116 @@
+"""Elastic path/pod health: phi-window quarantine, remesh planning,
+straggler policy.
+
+``LinkHealth`` is the host-side mirror of the paper's source-ToR Congestion
+Table: a path reported slow stays quarantined for ``phi_steps`` training
+steps (refreshing on every new report, exactly like the table's phi timer),
+and ``plan()`` bakes the current quarantine set into a static
+``PathPlan`` so the next grad sync routes around it.  Reports come from
+wherever congestion is observed — straggling collective timings in a real
+deployment, or the netsim fluid simulator through ``dist.netfeed`` in the
+co-simulation loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.dist import collectives
+
+
+def alternating_directions(n_paths: int) -> tuple[int, ...]:
+    """Default ring-direction assignment: adjacent paths run opposite ways
+    so bidirectional host links are driven symmetrically."""
+    return tuple(1 if p % 2 == 0 else -1 for p in range(n_paths))
+
+
+@dataclasses.dataclass
+class LinkHealth:
+    """Per-path quarantine with a refreshing phi window (in steps).
+
+    A path is inactive at ``step`` iff a slowness report arrived strictly
+    fewer than ``phi_steps`` steps ago; each new report extends the window.
+    """
+
+    n_paths: int
+    phi_steps: int = 16
+    directions: tuple[int, ...] | None = None
+
+    def __post_init__(self):
+        assert self.n_paths >= 1 and self.phi_steps >= 1
+        if self.directions is None:
+            self.directions = alternating_directions(self.n_paths)
+        assert len(self.directions) == self.n_paths
+        self._last_report: dict[int, int] = {}
+
+    def report_slow(self, path: int, step: int) -> None:
+        assert 0 <= path < self.n_paths, path
+        prev = self._last_report.get(path)
+        self._last_report[path] = step if prev is None else max(prev, step)
+
+    def inactive(self, step: int) -> tuple[bool, ...]:
+        return tuple(
+            self._last_report.get(p) is not None
+            and step < self._last_report[p] + self.phi_steps
+            for p in range(self.n_paths)
+        )
+
+    def plan(self, step: int, n_chunks: int = 4,
+             wire_dtype: str = "float32") -> collectives.PathPlan:
+        """PathPlan avoiding currently quarantined paths."""
+        return collectives.PathPlan(
+            n_chunks=n_chunks,
+            directions=tuple(self.directions),
+            inactive=self.inactive(step),
+            wire_dtype=wire_dtype,
+        )
+
+
+# ------------------------------------------------------------- pod remesh
+@dataclasses.dataclass(frozen=True)
+class RemeshPlan:
+    new_shape: tuple[int, ...]
+    surviving_pods: tuple[int, ...]
+    per_pod_batch_scale: float
+    resume_step: int
+
+
+def remesh_plan(mesh_shape: tuple[int, ...], failed_pods: tuple[int, ...],
+                resume_step: int) -> RemeshPlan:
+    """Shrink the pod axis around failed pods, keeping the global batch:
+    each survivor picks up ``n_pods / n_survivors`` of the per-pod batch and
+    training resumes from the last checkpoint at ``resume_step``."""
+    n_pods = mesh_shape[0]
+    failed = set(failed_pods)
+    assert all(0 <= p < n_pods for p in failed), failed_pods
+    surviving = tuple(p for p in range(n_pods) if p not in failed)
+    if not surviving:
+        raise RuntimeError(
+            f"all {n_pods} pods failed — nothing to remesh onto")
+    return RemeshPlan(
+        new_shape=(len(surviving),) + tuple(mesh_shape[1:]),
+        surviving_pods=surviving,
+        per_pod_batch_scale=n_pods / len(surviving),
+        resume_step=resume_step,
+    )
+
+
+# -------------------------------------------------------------- stragglers
+@dataclasses.dataclass
+class StragglerPolicy:
+    """Deadline-based straggler watchdog: ``max_misses`` consecutive
+    over-deadline steps quarantine the rank; one on-time step recovers it."""
+
+    deadline_s: float
+    max_misses: int = 3
+
+    def __post_init__(self):
+        assert self.deadline_s > 0 and self.max_misses >= 1
+        self._misses: dict[int, int] = {}
+
+    def observe(self, rank: int, step_duration_s: float) -> str:
+        if step_duration_s <= self.deadline_s:
+            self._misses[rank] = 0
+            return "ok"
+        misses = self._misses.get(rank, 0) + 1
+        self._misses[rank] = misses
+        return "quarantine" if misses >= self.max_misses else "warn"

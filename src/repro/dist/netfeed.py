@@ -1,0 +1,115 @@
+"""Netsim -> dist feedback: close the loop between the fluid fabric
+simulator and the training-side path planner.
+
+The co-simulation cycle (DESIGN.md §11):
+
+  1. a ``PathPlan`` is rendered into the ring-schedule traffic pattern it
+     would put on the wire (``netsim.workloads.collective_trace``) — the
+     paper's AI-training traffic mode, runnable under all five schemes on
+     the sweep runner;
+  2. the fluid sim runs it over a (possibly degraded) topology;
+  3. ``report_congestion`` converts the sim's per-path offered-load /
+     capacity statistics into ``LinkHealth.report_slow`` events — the same
+     events a real deployment would derive from CNP counters or straggling
+     chunk completions;
+  4. ``LinkHealth.plan`` emits the next step's PathPlan, which now routes
+     around the congested/failed paths.
+
+Path identity mapping: on ``leaf_spine`` a ToR uplink IS a path (path p
+crosses spine p); on ``three_tier`` uplink a fans out to the ``n_core``
+paths (a, c) riding it, so an overloaded uplink quarantines all of them.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.dist.elastic import LinkHealth
+
+
+def path_utilization(topo, outs, *, leaf: int | None = None) -> np.ndarray:
+    """Time-mean offered-load / capacity ratio per ToR uplink.
+
+    ``outs`` is the engine's StepOutputs (``uplink_load``: [T', L, S]
+    offered bps, possibly window-averaged).  Returns [S] for one leaf or
+    the per-uplink max over leaves (the planner cares about the worst
+    source ToR using the path).
+    """
+    up = np.asarray(outs.uplink_load)  # [T', L, S]
+    cap = np.asarray(topo.capacity)[np.asarray(topo.uplink_ids)]  # [L, S]
+    util = up.mean(axis=0) / np.maximum(cap, 1.0)  # [L, S]
+    return util[leaf] if leaf is not None else util.max(axis=0)
+
+
+def _paths_for_uplink(topo, uplink: int) -> tuple[int, ...]:
+    if topo.kind == "three_tier":
+        n_core = topo.n_paths // topo.uplink_ids.shape[1]
+        return tuple(uplink * n_core + c for c in range(n_core))
+    return (uplink,)  # leaf_spine: uplink s <-> path s
+
+
+def report_congestion(health: LinkHealth, topo, outs, *, step: int = 0,
+                      leaf: int | None = None, overload: float = 1.5,
+                      dead_capacity_frac: float = 0.01) -> tuple[int, ...]:
+    """Feed one simulation's per-path stats into ``health``.
+
+    A path is reported slow when its uplink's time-mean offered load
+    exceeded ``overload``x capacity (sustained congestion: the queue grew
+    through the whole trace), or when the uplink's capacity itself is below
+    ``dead_capacity_frac`` of the leaf-median (a failed/downed spine —
+    offered load on a dead link may legitimately decay to zero once DCQCN
+    chokes the victims, but the path is still unusable).
+    Returns the quarantined path ids.
+    """
+    assert health.n_paths == topo.n_paths, (health.n_paths, topo.n_paths)
+    util = path_utilization(topo, outs, leaf=leaf)  # [n_uplinks]
+    cap = np.asarray(topo.capacity)[np.asarray(topo.uplink_ids)]  # [L, S]
+    cap = cap[leaf] if leaf is not None else cap.min(axis=0)
+    dead = cap < dead_capacity_frac * np.median(cap)
+    slow: list[int] = []
+    for u in range(util.shape[0]):
+        if util[u] > overload or dead[u]:
+            for p in _paths_for_uplink(topo, u):
+                health.report_slow(p, step)
+                slow.append(p)
+    return tuple(slow)
+
+
+@dataclasses.dataclass
+class CoSimResult:
+    result: object  # sweep CompactResult (finish / cnp_pkts / spill)
+    outs: object  # StepOutputs
+    health: LinkHealth
+    slow_paths: tuple[int, ...]
+    plan: object  # next-step PathPlan
+
+
+def co_simulate(topo, plan, hosts, size_bytes: float, *, scheme: str = "ecmp",
+                duration_s: float = 2e-3, health: LinkHealth | None = None,
+                step: int = 0, overload: float = 1.5,
+                **cfg_kw) -> CoSimResult:
+    """One full feedback cycle: plan -> trace -> sim -> health -> new plan.
+
+    Imports netsim lazily so ``repro.dist`` stays importable without
+    pulling the engine in (the subprocess collective tests don't need it).
+    """
+    from repro.netsim import sweep, workloads
+    from repro.netsim.engine import SimConfig
+
+    # healthy-uplink rate for the ring cadence: the median is immune to the
+    # very degraded links the co-sim exists to detect (capacity[0] would be
+    # leaf0-spine0 — exactly the link a killed-spine-0 scenario nukes)
+    link_bw = float(np.median(np.asarray(topo.capacity)[np.asarray(topo.uplink_ids)]))
+    trace = workloads.collective_trace(plan, hosts, size_bytes, link_bw=link_bw)
+    cfg = SimConfig(scheme=scheme, duration_s=duration_s, **cfg_kw)
+    result, outs = sweep.run_one(topo, cfg, trace)
+    if health is None:
+        health = LinkHealth(n_paths=topo.n_paths,
+                            directions=tuple(plan.directions)
+                            if len(plan.directions) == topo.n_paths else None)
+    slow = report_congestion(health, topo, outs, step=step, overload=overload)
+    new_plan = health.plan(step, n_chunks=plan.n_chunks,
+                           wire_dtype=plan.wire_dtype)
+    return CoSimResult(result=result, outs=outs, health=health,
+                       slow_paths=slow, plan=new_plan)

@@ -8,6 +8,8 @@ from __future__ import annotations
 
 import jax
 
+from repro.dist import _compat  # noqa: F401  (jax API shims for 0.4.x)
+
 
 def _make(shape, axes):
     axis_types = (jax.sharding.AxisType.Auto,) * len(axes)
@@ -26,6 +28,13 @@ def make_mesh_like(shape: tuple[int, ...]):
     host devices)."""
     axes = ("pod", "data", "model")[-len(shape):]
     return _make(shape, axes)
+
+
+def make_pod_mesh(n_pods: int):
+    """1-D pod-only mesh: every member is one pod gateway.  Used by the
+    train driver's --grad-sync seqbalance mode, where the whole grad sync
+    runs over the pod axis through dist.collectives."""
+    return _make((n_pods,), ("pod",))
 
 
 def dp_axes(mesh) -> tuple[str, ...]:

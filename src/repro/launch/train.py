@@ -17,8 +17,8 @@ import jax
 
 from repro.configs import registry
 from repro.data import pipeline
-from repro.dist import elastic
-from repro.launch import steps
+from repro.dist import collectives, elastic
+from repro.launch import mesh as mesh_mod, steps
 from repro.train import checkpoint, optimizer as opt_mod
 
 
@@ -34,6 +34,11 @@ def main():
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--grad-sync", default="xla", choices=["xla", "seqbalance"],
+                    help="pod-axis gradient sync: one fat XLA all-reduce "
+                         "(baseline) or the SeqBalance multipath chunk rings")
+    ap.add_argument("--n-chunks", type=int, default=4,
+                    help="seqbalance grad-sync chunk count")
     args = ap.parse_args()
 
     cfg = registry.get_config(args.arch, reduced=args.reduced)
@@ -51,7 +56,19 @@ def main():
         start = s + 1
         print(f"[resume] from step {s}")
 
-    step_fn = jax.jit(steps.make_train_step(cfg, ocfg))
+    mesh = None
+    if args.grad_sync == "seqbalance":
+        n_dev = jax.local_device_count()
+        if n_dev > 1 and args.batch % n_dev == 0:
+            # every local device is one "pod" gateway: the pod axis carries
+            # the grad sync through dist.collectives, data/model stay local
+            mesh = mesh_mod.make_pod_mesh(n_dev)
+            print(f"[grad-sync] seqbalance over {n_dev}-way pod axis")
+        else:
+            print("[grad-sync] seqbalance needs >1 device and a batch the "
+                  "device count divides — falling back to the XLA baseline")
+    plan = collectives.PathPlan(n_chunks=args.n_chunks)
+    step_fn = jax.jit(steps.make_train_step(cfg, ocfg, mesh, args.grad_sync, plan))
     watchdog = elastic.StragglerPolicy(deadline_s=120.0)
     t_last = time.time()
     for i in range(start, args.steps):

@@ -125,6 +125,20 @@ def poisson_trace(cfg: TraceConfig) -> Trace:
             if not same.any():
                 break
             dst[same] = rng.integers(0, cfg.n_hosts, int(same.sum())).astype(np.int32)
+        if cfg.n_hosts > cfg.hosts_per_leaf:
+            # deterministic fallback: shift any survivor of the rejection
+            # loop to the same offset on the next leaf (never silently keep
+            # an intra-rack pair — it would vanish from the fabric stats).
+            # The shift moves the LEAF index, not the host index, so a
+            # ragged final leaf (n_hosts % hosts_per_leaf != 0) can't wrap
+            # a survivor back into its own rack; the clamp only engages
+            # when the target is that ragged final leaf.
+            hpl = cfg.hosts_per_leaf
+            n_leaf = -(-cfg.n_hosts // hpl)
+            same = (src // hpl) == (dst // hpl)
+            shifted = ((dst // hpl + 1) % n_leaf) * hpl + dst % hpl
+            shifted = np.minimum(shifted, cfg.n_hosts - 1)
+            dst = np.where(same, shifted, dst).astype(np.int32)
     else:
         dst = rng.integers(0, cfg.n_hosts, n).astype(np.int32)
         dst = np.where(dst == src, (dst + 1) % cfg.n_hosts, dst).astype(np.int32)
@@ -151,6 +165,73 @@ def poisson_trace(cfg: TraceConfig) -> Trace:
         dst=padded(dst, 0),
         flow_id=padded(flow_id, 0),
         valid=valid,
+    )
+
+
+def collective_trace(
+    plan,
+    hosts: list[int] | np.ndarray,
+    size_bytes: float,
+    *,
+    link_bw: float,
+    start_s: float = 0.0,
+    rounds: int | None = None,
+    round_gap_s: float | None = None,
+    seed: int = 0,
+) -> Trace:
+    """AI-training traffic mode: the ring schedule of a grad-sync PathPlan
+    (``repro.dist.collectives.PathPlan`` — duck-typed: anything with
+    ``n_chunks``, ``directions`` and ``chunk_paths()``) rendered as a
+    sweepable Trace.
+
+    ``hosts`` are the ring members (e.g. one host per leaf — the pod
+    gateways).  A chunked bidirectional ring all-reduce of ``size_bytes``
+    per member runs ``2*(n-1)`` rounds; in every round each member sends
+    one segment of each chunk to its ring neighbor in that chunk's
+    direction.  The result is the paper's motivating pattern: a handful of
+    huge, synchronized, long-lived flows between fixed host pairs — ECMP
+    collapses them onto few fabric paths, SeqBalance's sub-flows spread
+    them.  Each (chunk, ring member) pair keeps ONE flow id across all
+    rounds — the persistent QP of that chunk-ring segment — so hash-based
+    schemes pin it to one path for the whole collective (re-hashing per
+    round would both reorder the chunk and accidentally load-balance the
+    very hotspots this traffic mode exists to demonstrate).
+
+    ``round_gap_s`` defaults to the segment serialization time at
+    ``link_bw`` (the idealized bulk-synchronous cadence).
+    """
+    hosts = np.asarray(hosts, np.int64)
+    n = int(hosts.size)
+    assert n >= 2, "a ring needs at least two members"
+    n_chunks = int(plan.n_chunks)
+    paths = tuple(plan.chunk_paths())
+    dirs = tuple(int(plan.directions[p]) for p in paths)  # per-chunk ring dir
+    seg_bytes = float(size_bytes) / (n * n_chunks)
+    if round_gap_s is None:
+        round_gap_s = seg_bytes * 8.0 / link_bw
+    n_rounds = 2 * (n - 1) if rounds is None else int(rounds)
+
+    base = (seed * 0x9E3779B9) & 0xFFFFFFFF
+    sizes, arrivals, src, dst, flow_id = [], [], [], [], []
+    for r in range(n_rounds):
+        t = start_s + r * round_gap_s
+        for c, d in enumerate(dirs):
+            for i in range(n):
+                sizes.append(seg_bytes)
+                arrivals.append(t)
+                src.append(hosts[i])
+                dst.append(hosts[(i + d) % n])
+                # one QP per (chunk, member), persistent across rounds
+                flow_id.append(((c * n + i) * 2654435761 + base) & 0xFFFFFFFF)
+    f = len(sizes)
+    flow_id = np.asarray(flow_id, np.uint32)
+    return Trace(
+        sizes=np.asarray(sizes, np.float32),
+        arrivals=np.asarray(arrivals, np.float32),
+        src=np.asarray(src, np.int32),
+        dst=np.asarray(dst, np.int32),
+        flow_id=flow_id,
+        valid=np.ones(f, bool),
     )
 
 

@@ -11,7 +11,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("repro.dist.collectives", reason="repro.dist lands in a future PR")
 from repro.dist.collectives import PathPlan, quantize_int8, dequantize_int8
 from repro.dist import elastic
 

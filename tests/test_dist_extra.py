@@ -1,0 +1,149 @@
+"""repro.dist extras: chunk->path planning properties, seqbalance == psum
+across mesh sizes, and the netsim co-simulation round trip (a killed spine
+is detected from the fluid sim and routed around by the next PathPlan)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.dist import netfeed
+from repro.dist.collectives import PathPlan
+from repro.dist.elastic import LinkHealth, alternating_directions
+from repro.netsim import topology, workloads
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+# ------------------------------------------------------- planning properties
+def test_chunk_paths_property_never_inactive_unless_all_dead():
+    rng = np.random.default_rng(0)
+    for _ in range(500):
+        n_paths = int(rng.integers(1, 9))
+        n_chunks = int(rng.integers(1, 17))
+        inactive = tuple(bool(b) for b in rng.integers(0, 2, n_paths))
+        plan = PathPlan(n_chunks=n_chunks,
+                        directions=alternating_directions(n_paths),
+                        inactive=inactive)
+        paths = plan.chunk_paths()
+        assert len(paths) == n_chunks
+        assert all(0 <= p < n_paths for p in paths)
+        if all(inactive):
+            # total quarantine carries no routing signal: traffic must
+            # still flow, on the primary path
+            assert paths == (0,) * n_chunks
+        else:
+            assert not any(inactive[p] for p in paths)
+            # round-robin: active paths are used near-uniformly
+            active = [p for p in range(n_paths) if not inactive[p]]
+            counts = [paths.count(p) for p in active]
+            assert max(counts) - min(counts) <= 1
+        assert plan.chunk_paths() == paths  # deterministic
+
+
+# ------------------------------------------------- collective == psum (2/4/8)
+def test_seqbalance_matches_psum_across_mesh_sizes():
+    code = textwrap.dedent("""
+        import json
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.dist.collectives import PathPlan, seqbalance_all_reduce
+
+        out = {}
+        for n in (2, 4, 8):
+            mesh = jax.make_mesh((n,), ("pod",), devices=jax.devices()[:n])
+            x = jax.random.normal(jax.random.PRNGKey(n), (n, 65),
+                                  dtype=jnp.float32)
+            plan = PathPlan(n_chunks=3, directions=(1, -1))
+
+            def seq(x):
+                return seqbalance_all_reduce(x, "pod", plan)
+
+            def ref(x):
+                return jax.lax.psum(x, "pod")
+
+            gs = jax.jit(jax.shard_map(seq, mesh=mesh, in_specs=P("pod"),
+                                       out_specs=P("pod")))
+            gr = jax.jit(jax.shard_map(ref, mesh=mesh, in_specs=P("pod"),
+                                       out_specs=P("pod")))
+            out[str(n)] = float(np.abs(np.asarray(gs(x)) -
+                                       np.asarray(gr(x))).max())
+        print(json.dumps(out))
+    """)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=600)
+    assert r.returncode == 0, r.stderr[-3000:]
+    errs = json.loads(r.stdout.strip().splitlines()[-1])
+    for n, err in errs.items():
+        assert err < 1e-4, (n, errs)
+
+
+# --------------------------------------------------- netsim feedback adapter
+class _FakeOuts:
+    def __init__(self, uplink_load):
+        self.uplink_load = uplink_load
+
+
+def test_report_congestion_overload_rule():
+    topo = topology.leaf_spine(2, 4, 2, 40e9)
+    # leaf 0 offers 2x capacity on uplink 1, idle elsewhere
+    up = np.zeros((10, 2, 4), np.float32)
+    up[:, 0, 1] = 80e9
+    lh = LinkHealth(n_paths=topo.n_paths, phi_steps=4)
+    slow = netfeed.report_congestion(lh, topo, _FakeOuts(up), step=5,
+                                     overload=1.5)
+    assert slow == (1,)
+    assert lh.inactive(6) == (False, True, False, False)
+    assert lh.inactive(9) == (False, False, False, False)  # phi expired
+
+
+def test_collective_trace_shape_and_schedule():
+    plan = PathPlan(n_chunks=4, directions=(1, -1, 1, -1))
+    tr = workloads.collective_trace(plan, [0, 2, 4, 6], 2e6, link_bw=40e9)
+    n, rounds = 4, 2 * (4 - 1)
+    assert tr.sizes.size == rounds * plan.n_chunks * n
+    assert tr.valid.all()
+    np.testing.assert_allclose(tr.sizes, 2e6 / (n * plan.n_chunks))
+    # ring invariant: every flow connects distinct adjacent ring members
+    ring = {0: 0, 2: 1, 4: 2, 6: 3}
+    for s, d in zip(tr.src, tr.dst):
+        assert (ring[int(d)] - ring[int(s)]) % n in (1, n - 1)
+    # an inactive path shifts its chunks onto surviving directions
+    tr2 = workloads.collective_trace(
+        PathPlan(n_chunks=4, directions=(1, -1, 1, -1),
+                 inactive=(True, False, True, False)),
+        [0, 2, 4, 6], 2e6, link_bw=40e9)
+    assert (np.sort(tr2.arrivals) == np.sort(tr.arrivals)).all()
+
+
+def test_cosim_round_trip_reroutes_around_killed_spine():
+    """collective_trace under a killed-spine topology -> the fluid sim's
+    per-path stats mark the path slow -> the next PathPlan avoids it."""
+    L, S = 4, 4
+    dead = 2
+    overrides = {}
+    for leaf in range(L):
+        overrides[leaf * S + dead] = 1e6  # up[l, dead] effectively down
+        overrides[L * S + dead * L + leaf] = 1e6  # down[dead, l]
+    topo = topology.leaf_spine(L, S, 2, 40e9, capacity_overrides=overrides)
+    plan = PathPlan(n_chunks=4, directions=(1, -1, 1, -1))
+    hosts = [0, 2, 4, 6]  # one ring member per leaf
+
+    res = netfeed.co_simulate(topo, plan, hosts, 2e6, scheme="ecmp",
+                              duration_s=2e-3, step=100)
+    assert dead in res.slow_paths
+    # ECMP kept hashing traffic onto the dead spine: the offered-load /
+    # capacity ratio itself screams (the congestion rule, not just the
+    # capacity floor)
+    util = netfeed.path_utilization(topo, res.outs)
+    assert util[dead] > 10.0, util
+    # the replanned collective routes around it
+    assert res.health.inactive(100)[dead]
+    assert dead not in res.plan.chunk_paths()
+    assert set(res.plan.chunk_paths()) <= {p for p in range(S) if p != dead}

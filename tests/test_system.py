@@ -10,7 +10,6 @@ import pytest
 from repro.configs import registry
 from repro.data import pipeline
 
-pytest.importorskip("repro.dist.sharding", reason="repro.dist lands in a future PR")
 from repro.dist import sharding
 from repro.launch import steps
 from repro.models import model
