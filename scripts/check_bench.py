@@ -13,12 +13,59 @@ Compares a freshly measured fig12 fast-sweep record (benchmarks/run.py
 
 The baseline record may contain several runs (before/after rows across
 PRs); the gate reads the top-level "fig12_sweep" entry — the current one.
+
+``--cosim`` switches to the co-simulation convergence gate instead: rows
+under "cosim" are matched by (topo, scheme, ring, seed) and the run fails
+when a scenario's convergence-epoch count regressed by MORE than 1 vs the
+committed baseline, stopped converging at all, or — for solo-run rows,
+the only ones carrying ``rebuilds_after_first`` — rebuilt sweep
+executables after the first epoch (the traced-capacity compile-reuse
+contract — epochs must share one program regardless of fault state).
 """
 from __future__ import annotations
 
 import argparse
 import json
 import sys
+
+
+def check_cosim(new: dict | None, base: dict | None) -> int:
+    if not new or not new.get("rows"):
+        print("FAIL: new record has no cosim rows (did --only cosim run?)")
+        return 1
+    base_rows = {}
+    for r in (base or {}).get("rows", []):
+        base_rows[(r["topo"], r["scheme"], r["ring"], r.get("seed", 0))] = r
+    if not base_rows:
+        print("WARN: baseline has no cosim rows; gating convergence + "
+              "rebuilds only")
+    ok = True
+    for r in new["rows"]:
+        key = (r["topo"], r["scheme"], r["ring"], r.get("seed", 0))
+        name = "/".join(str(k) for k in key)
+        conv = r.get("convergence_epochs")
+        if conv is None:
+            ok = False
+            print(f"FAIL: {name} no longer converges")
+            continue
+        b = base_rows.get(key)
+        if b is not None and b.get("convergence_epochs") is not None:
+            limit = b["convergence_epochs"] + 1
+            verdict = "OK" if conv <= limit else "FAIL"
+            ok &= conv <= limit
+            print(f"{verdict}: {name} convergence_epochs {conv} "
+                  f"(baseline {b['convergence_epochs']}, limit {limit})")
+        else:
+            print(f"OK: {name} convergence_epochs {conv} (no baseline row)")
+        # only solo-run rows carry the key — concurrent grid workers
+        # cross-contaminate the process-global build counter, so the bench
+        # omits it for them
+        rb = r.get("rebuilds_after_first")
+        if rb:
+            ok = False
+            print(f"FAIL: {name} rebuilt {rb} sweep executables after "
+                  f"epoch 0 (traced-capacity reuse broken)")
+    return 0 if ok else 1
 
 
 def main() -> int:
@@ -29,7 +76,17 @@ def main() -> int:
                     help="allowed fractional per-step slowdown vs baseline")
     ap.add_argument("--max-stat-diff", type=float, default=0.01,
                     help="allowed compact-vs-dense stat divergence (%%)")
+    ap.add_argument("--cosim", action="store_true",
+                    help="gate the cosim convergence rows instead of the "
+                         "fig12 sweep")
     args = ap.parse_args()
+
+    if args.cosim:
+        with open(args.new) as f:
+            new_c = json.load(f).get("cosim")
+        with open(args.baseline) as f:
+            base_c = json.load(f).get("cosim")
+        return check_cosim(new_c, base_c)
 
     with open(args.new) as f:
         new = json.load(f).get("fig12_sweep")

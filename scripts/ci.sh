@@ -19,6 +19,14 @@ XLA_FLAGS="--xla_force_host_platform_device_count=8" \
 # compact engine, and the metrics layer end to end in under a minute.
 python -m benchmarks.run --only fig10 --json /tmp/BENCH_smoke.json
 
+# 2-epoch co-sim smoke on the forced 8-device platform: the training-side
+# plan -> fluid-sim -> quarantine -> plan loop (dist.cosim via launch.train
+# --cosim-epochs), healthy fabric — just the loop plumbing, the sharded
+# dispatch, and the traced-capacity compile reuse.
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+  python -m repro.launch.train --cosim-epochs 2 --cosim-kill-spine -1 \
+  --cosim-only
+
 # perf regression gate: rerun the fig12 fast sweep (compact + dense oracle)
 # and fail if the compact per-step cost regressed >30% vs the committed
 # baseline, if the compact-vs-dense stat divergence exceeds 0.01%, or if
@@ -27,4 +35,14 @@ python -m benchmarks.run --only fig10 --json /tmp/BENCH_smoke.json
 if [ -z "${REPRO_CI_SKIP_BENCH_GATE:-}" ]; then
   python -m benchmarks.run --only netsim_speedup --json /tmp/BENCH_gate.json
   python scripts/check_bench.py /tmp/BENCH_gate.json BENCH_netsim.json
+fi
+
+# co-sim convergence gate: rerun the fast killed-spine scenarios and fail
+# if any scenario's convergence-epoch count regressed by more than 1 vs
+# the committed record, if one stopped converging, or if epochs after the
+# first rebuilt sweep executables (the traced-capacity reuse contract).
+if [ -z "${REPRO_CI_SKIP_BENCH_GATE:-}" ]; then
+  python -m benchmarks.run --only cosim --json /tmp/BENCH_cosim.json
+  python scripts/check_bench.py /tmp/BENCH_cosim.json BENCH_netsim.json \
+    --cosim
 fi

@@ -10,8 +10,13 @@ not reorder.  This package supplies that side of the reproduction:
     production 16x16 (and 2x16x16 multi-pod) meshes;
   * ``elastic``     — phi-window path quarantine (LinkHealth), pod-failure
     remesh planning and the straggler watchdog;
-  * ``netfeed``     — the netsim co-simulation loop: PathPlan -> ring-trace
-    workload -> fluid sim -> per-path congestion -> LinkHealth -> new plan.
+  * ``netfeed``     — one netsim co-simulation cycle: PathPlan -> ring-trace
+    workload -> fluid sim -> per-path congestion -> LinkHealth -> new plan;
+  * ``cosim``       — the multi-epoch driver over a mutable fault schedule
+    (killed/recovering spines, brown-outs): phi-expiry releases quarantined
+    paths, per-epoch FCT/imbalance/plan-churn land in a CosimHistory, and
+    link capacity rides through the sweep as a traced operand so every
+    epoch reuses one compiled program (the Fig. 11 convergence story).
 
 Importing the package installs the jax 0.4.x forward-compat shims
 (``_compat``) so the modern sharding API the modules are written against

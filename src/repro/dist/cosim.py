@@ -1,0 +1,321 @@
+"""Multi-epoch co-simulation driver: the paper's Fig. 11 convergence story.
+
+``dist.netfeed.co_simulate`` closes ONE plan -> trace -> fluid-sim ->
+health -> plan cycle.  This module iterates it over a mutable FAULT
+SCHEDULE — spines killed at epoch k, recovering at epoch k + m, capacity
+brown-outs — and records per-epoch FCT / imbalance / plan-churn into a
+``CosimHistory`` the benches plot as convergence curves and CDFs:
+
+  epoch t:  capacity_t = capacity_at(topo, faults, t)      (fault state)
+            trace_t    = collective_trace(plan_t, ...)     (ring schedule;
+                         ECMP-steered so plan_t's chunk->path map BINDS)
+            sim        = sweep.run_one(..., capacity=capacity_t)
+            reports    = report_congestion(health, ..., step=t)
+            plan_{t+1} = health.plan(t + 1)                (phi-expiry:
+                         a path re-enters exactly phi_steps after its
+                         last report — recovered spines are released)
+
+Two contracts make the loop cheap and honest:
+
+  * capacity is a TRACED sweep operand (netsim/sweep.py), so every epoch
+    after the first reuses the one compiled program no matter how the
+    fault schedule mutates link capacities — ``EpochRecord.new_builds``
+    proves it per epoch from ``sweep.cache_stats()``;
+  * the ring cadence and the per-flow slot window are fixed from the
+    HEALTHY topology at epoch 0 (the collective's schedule does not know
+    about faults, and one slot per flow makes spill — and therefore
+    shape-changing retries — impossible), so trace shapes never drift.
+
+``run_cosim_grid`` fans a (scheme x ring size x fault schedule x seed)
+grid through ``netsim.sweep.run_jobs`` — including paper-scale
+``three_tier`` (320 hosts) — one callable job per grid point.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import numpy as np
+
+from repro.dist import netfeed
+from repro.dist.elastic import LinkHealth
+
+
+# ---------------------------------------------------------- fault schedule
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """Capacity of ``links`` is multiplied by ``scale`` for epochs in
+    [start_epoch, end_epoch) — end_epoch None means the fault never
+    recovers.  scale 0.0 is a hard failure; 0 < scale < 1 a brown-out."""
+
+    start_epoch: int
+    links: tuple[int, ...]
+    scale: float = 0.0
+    end_epoch: int | None = None
+
+    def active(self, epoch: int) -> bool:
+        return self.start_epoch <= epoch and (
+            self.end_epoch is None or epoch < self.end_epoch)
+
+
+def kill_spine(topo, spine: int, *, epoch: int,
+               recover_epoch: int | None = None) -> FaultEvent:
+    """Hard-fail one fabric switch (leaf_spine: a spine; three_tier: an
+    aggregation switch — see ``topology.spine_links``)."""
+    from repro.netsim.topology import spine_links
+
+    return FaultEvent(epoch, spine_links(topo, spine), 0.0, recover_epoch)
+
+
+def brownout_spine(topo, spine: int, scale: float, *, epoch: int,
+                   recover_epoch: int | None = None) -> FaultEvent:
+    """Degrade one fabric switch's links to ``scale`` x capacity."""
+    from repro.netsim.topology import spine_links
+
+    assert 0.0 < scale < 1.0, scale
+    return FaultEvent(epoch, spine_links(topo, spine), scale, recover_epoch)
+
+
+def capacity_at(topo, faults, epoch: int) -> np.ndarray:
+    """The epoch's link-capacity vector (f32[n_links + 1], sentinel slot
+    preserved): base topology capacity with every active fault applied."""
+    cap = np.asarray(topo.capacity, np.float32).copy()
+    for ev in faults:
+        if ev.active(epoch):
+            cap[list(ev.links)] *= np.float32(ev.scale)
+    return cap
+
+
+def ring_hosts(topo, n: int) -> list[int]:
+    """``n`` ring members striped across leaves (host i lives on leaf
+    i % n_leaf) — the pod-gateway pattern: consecutive ring neighbors are
+    always on different racks while n <= n_leaf, so every ring segment
+    crosses the fabric."""
+    L, hpl = topo.n_leaf, topo.hosts_per_leaf
+    assert 2 <= n <= topo.n_hosts, (n, topo.n_hosts)
+    return [(i % L) * hpl + (i // L) for i in range(n)]
+
+
+# ------------------------------------------------------------- epoch record
+@dataclasses.dataclass
+class EpochRecord:
+    """One planning epoch's observables.  FCTs are CENSORED at the horizon
+    (metrics.fct_samples): a killed spine starves flows outright and a
+    survivors-only p99 would read the disaster epoch as healthy."""
+
+    epoch: int
+    fct_p50_s: float
+    fct_p99_s: float
+    fct_mean_s: float
+    completion: float
+    imbalance_mean: float
+    plan_churn: int  # inactive-flag flips between this plan and the next
+    quarantined: tuple[int, ...]  # paths inactive in THIS epoch's plan
+    reported_slow: tuple[int, ...]  # paths report_congestion flagged
+    spill_steps: int
+    new_builds: int  # sweep executables built this epoch (0 after epoch 0)
+    fct: np.ndarray  # censored per-flow samples (CDFs)
+    imbalance: np.ndarray  # per-(ToR, window) imbalance samples
+
+
+@dataclasses.dataclass
+class CosimHistory:
+    """The driver's full output: per-epoch records, the plan sequence, and
+    the LinkHealth whose phi windows produced it."""
+
+    scheme: str
+    phi_steps: int
+    duration_s: float
+    records: list[EpochRecord]
+    plans: list  # PathPlan used in epoch t (len == epochs)
+    final_plan: object  # plan for epoch `epochs` (what a deployment ships)
+    health: LinkHealth
+
+    @property
+    def epochs(self) -> int:
+        return len(self.records)
+
+    def baseline_p99(self, fault_epoch: int) -> float:
+        """Pre-failure reference: median censored p99 over the epochs
+        before the first fault (epoch 0 if the fault hits immediately)."""
+        pre = [r.fct_p99_s for r in self.records[:max(fault_epoch, 1)]]
+        return float(np.median(pre))
+
+    def convergence_epoch(self, fault_epoch: int,
+                          tol: float = 0.10) -> int | None:
+        """First epoch >= ``fault_epoch`` whose censored p99 FCT is back
+        within ``tol`` of the pre-failure baseline with every flow
+        completing — the paper's "FCT recovers within a few epochs"
+        claim, as a number.  None = never converged."""
+        base = self.baseline_p99(fault_epoch)
+        for r in self.records[fault_epoch:]:
+            if r.completion >= 1.0 and r.fct_p99_s <= (1.0 + tol) * base:
+                return r.epoch
+        return None
+
+    def fct_cdf(self, epochs: list[int] | None = None, points: int = 50):
+        from repro.netsim import metrics
+
+        rs = self.records if epochs is None else \
+            [r for r in self.records if r.epoch in epochs]
+        return metrics.cdf(np.concatenate([r.fct for r in rs]), points)
+
+    def imbalance_cdf(self, epochs: list[int] | None = None,
+                      points: int = 50):
+        from repro.netsim import metrics
+
+        rs = self.records if epochs is None else \
+            [r for r in self.records if r.epoch in epochs]
+        samples = np.concatenate([r.imbalance for r in rs]) if any(
+            r.imbalance.size for r in rs) else np.zeros(1)
+        return metrics.cdf(samples, points)
+
+    def as_record(self) -> dict:
+        """JSON-able per-epoch curves for BENCH_netsim.json."""
+        rs = self.records
+        return dict(
+            scheme=self.scheme,
+            phi_steps=self.phi_steps,
+            epochs=self.epochs,
+            duration_ms=round(self.duration_s * 1e3, 3),
+            p50_us=[round(r.fct_p50_s * 1e6, 2) for r in rs],
+            p99_us=[round(r.fct_p99_s * 1e6, 2) for r in rs],
+            completion=[round(r.completion, 4) for r in rs],
+            imbalance_mean=[round(r.imbalance_mean, 4) for r in rs],
+            plan_churn=[r.plan_churn for r in rs],
+            n_quarantined=[len(r.quarantined) for r in rs],
+            spill_steps=[r.spill_steps for r in rs],
+            new_builds=[r.new_builds for r in rs],
+        )
+
+    def summary_lines(self) -> list[str]:
+        return [
+            f"epoch {r.epoch:2d} p99 {r.fct_p99_s * 1e6:8.1f}us "
+            f"done {r.completion:5.3f} quar {len(r.quarantined):3d} "
+            f"churn {r.plan_churn:3d} builds {r.new_builds}"
+            for r in self.records
+        ]
+
+
+# ------------------------------------------------------------------ driver
+def run_cosim(
+    topo,
+    hosts,
+    size_bytes: float,
+    *,
+    scheme: str = "ecmp",
+    epochs: int = 8,
+    faults: tuple = (),
+    phi_steps: int = 2,
+    n_chunks: int = 8,
+    wire_dtype: str = "float32",
+    dt: float = 10e-6,
+    duration_s: float | None = None,
+    overload: float = 1.5,
+    steer: bool = True,
+    health: LinkHealth | None = None,
+    seed: int = 0,
+    window_slots: int | None = None,
+    imbalance_sample_every: int = 10,
+    **cfg_kw,
+) -> CosimHistory:
+    """Run ``epochs`` plan -> sim -> health cycles over a fault schedule.
+
+    ``hosts`` are the ring members (``ring_hosts`` for the gateway
+    pattern); ``size_bytes`` the per-member all-reduce payload.  The ring
+    cadence is fixed from the healthy topology: one round every
+    max(segment serialization on the fabric, n_chunks segments on the host
+    NIC) — so every epoch's trace has identical shapes and the traced
+    capacity operand is the ONLY thing that changes with the fault state.
+    ``window_slots`` defaults to one slot per flow, which makes spill
+    impossible (a fault epoch can hold every flow in flight at once) and
+    therefore keeps the compiled program's shapes pinned.
+    """
+    from repro.netsim import metrics, sweep, workloads
+    from repro.netsim.engine import SimConfig
+
+    hosts = list(hosts)
+    n = len(hosts)
+    if health is None:
+        health = LinkHealth(n_paths=topo.n_paths, phi_steps=phi_steps)
+    else:
+        phi_steps = health.phi_steps
+    plan = health.plan(0, n_chunks=n_chunks, wire_dtype=wire_dtype)
+
+    cap0 = np.asarray(topo.capacity)
+    fabric_bw = float(np.median(cap0[np.asarray(topo.uplink_ids)]))
+    host_bw = float(cap0[topo.n_links - 2 * topo.n_hosts])
+    seg_bytes = size_bytes / (n * n_chunks)
+    # a member serializes all n_chunks segments of a round through one NIC
+    gap = max(seg_bytes * 8.0 / fabric_bw, n_chunks * seg_bytes * 8.0 / host_bw)
+    rounds = 2 * (n - 1)
+    if duration_s is None:
+        duration_s = rounds * gap * 2.5 + 50 * dt
+    n_steps = max(int(math.ceil(duration_s / dt)), 1)
+    duration_s = n_steps * dt
+    cfg = SimConfig(scheme=scheme, duration_s=duration_s, dt=dt, **cfg_kw)
+
+    W = window_slots
+    records: list[EpochRecord] = []
+    plans: list = []
+    for epoch in range(epochs):
+        cap = capacity_at(topo, faults, epoch)
+        trace = workloads.collective_trace(
+            plan, hosts, size_bytes, link_bw=fabric_bw, round_gap_s=gap,
+            seed=seed, steer_paths=topo.n_paths if steer else None)
+        if W is None:
+            W = int(trace.valid.sum())  # spill-proof: one slot per flow
+        b0 = sweep.cache_stats()["builds"]
+        result, outs = sweep.run_one(topo, cfg, trace, capacity=cap,
+                                     window_slots=W)
+        new_builds = sweep.cache_stats()["builds"] - b0
+        slow = netfeed.report_congestion(health, topo, outs, step=epoch,
+                                         overload=overload, capacity=cap)
+        next_plan = health.plan(epoch + 1, n_chunks=n_chunks,
+                                wire_dtype=wire_dtype)
+        churn = sum(int(a != b)
+                    for a, b in zip(plan.inactive, next_plan.inactive))
+        fct, completion = metrics.fct_samples(result, trace,
+                                              horizon_s=duration_s)
+        imb = metrics.throughput_imbalance(
+            outs, sample_every=imbalance_sample_every,
+            trace_stride=cfg.uplink_sample_every)
+        records.append(EpochRecord(
+            epoch=epoch,
+            fct_p50_s=float(np.percentile(fct, 50)),
+            fct_p99_s=float(np.percentile(fct, 99)),
+            fct_mean_s=float(fct.mean()),
+            completion=completion,
+            imbalance_mean=float(imb.mean()) if imb.size else 0.0,
+            plan_churn=churn,
+            quarantined=tuple(p for p, d in enumerate(plan.inactive) if d),
+            reported_slow=tuple(slow),
+            spill_steps=int(result.spill_steps),
+            new_builds=new_builds,
+            fct=fct,
+            imbalance=imb,
+        ))
+        plans.append(plan)
+        plan = next_plan
+    return CosimHistory(scheme=scheme, phi_steps=phi_steps,
+                        duration_s=duration_s, records=records, plans=plans,
+                        final_plan=plan, health=health)
+
+
+def run_cosim_grid(specs: list[dict], *, workers: int | None = None
+                   ) -> list[CosimHistory]:
+    """Fan a (scheme x ring size x fault schedule x seed) grid through the
+    sweep runner's job pool: one ``run_cosim`` epoch loop per spec dict,
+    dispatched by ``netsim.sweep.run_jobs`` (callable-job spelling), so
+    grid points share the executable cache and the sharded dispatch path.
+    Histories return in spec order.
+
+    Note: ``EpochRecord.new_builds`` attribution is per-process, so the
+    no-recompile acceptance check should read a grid of ONE spec (or
+    ``workers=1`` with distinct shapes) — concurrent grid points may
+    interleave their builds."""
+    from repro.netsim import sweep
+
+    return sweep.run_jobs([functools.partial(run_cosim, **spec)
+                           for spec in specs], workers=workers)

@@ -54,6 +54,15 @@ class LinkHealth:
             for p in range(self.n_paths)
         )
 
+    def expiry(self, path: int) -> int | None:
+        """First step at which ``path`` re-enters ``plan()`` — exactly
+        ``phi_steps`` after its last report (each report refreshes the
+        window).  None if the path was never reported.  The co-sim driver
+        and the phi-expiry regression tests read this to assert quarantine
+        release happens on the predicted epoch, not merely eventually."""
+        last = self._last_report.get(path)
+        return None if last is None else last + self.phi_steps
+
     def plan(self, step: int, n_chunks: int = 4,
              wire_dtype: str = "float32") -> collectives.PathPlan:
         """PathPlan avoiding currently quarantined paths."""

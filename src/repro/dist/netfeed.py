@@ -28,17 +28,27 @@ import numpy as np
 from repro.dist.elastic import LinkHealth
 
 
-def path_utilization(topo, outs, *, leaf: int | None = None) -> np.ndarray:
+def path_utilization(topo, outs, *, leaf: int | None = None,
+                     capacity: np.ndarray | None = None) -> np.ndarray:
     """Time-mean offered-load / capacity ratio per ToR uplink.
 
     ``outs`` is the engine's StepOutputs (``uplink_load``: [T', L, S]
     offered bps, possibly window-averaged).  Returns [S] for one leaf or
     the per-uplink max over leaves (the planner cares about the worst
-    source ToR using the path).
+    source ToR using the path).  ``capacity`` overrides ``topo.capacity``
+    (co-sim fault schedules evolve capacity per epoch without rebuilding
+    the topology).
+
+    A DEAD uplink (capacity ~0, e.g. a killed spine) reports +inf, not 0:
+    offered load on it legitimately decays to zero once DCQCN chokes the
+    victims, and dividing by the max(cap, 1) floor would then read the one
+    unusable path as the IDLEST one — the planner would herd flows onto it.
+    Deadness is decided on capacity, before the ratio.
     """
     up = np.asarray(outs.uplink_load)  # [T', L, S]
-    cap = np.asarray(topo.capacity)[np.asarray(topo.uplink_ids)]  # [L, S]
-    util = up.mean(axis=0) / np.maximum(cap, 1.0)  # [L, S]
+    cap_vec = np.asarray(topo.capacity if capacity is None else capacity)
+    cap = cap_vec[np.asarray(topo.uplink_ids)]  # [L, S]
+    util = np.where(cap <= 0.0, np.inf, up.mean(axis=0) / np.maximum(cap, 1.0))
     return util[leaf] if leaf is not None else util.max(axis=0)
 
 
@@ -51,7 +61,8 @@ def _paths_for_uplink(topo, uplink: int) -> tuple[int, ...]:
 
 def report_congestion(health: LinkHealth, topo, outs, *, step: int = 0,
                       leaf: int | None = None, overload: float = 1.5,
-                      dead_capacity_frac: float = 0.01) -> tuple[int, ...]:
+                      dead_capacity_frac: float = 0.01,
+                      capacity: np.ndarray | None = None) -> tuple[int, ...]:
     """Feed one simulation's per-path stats into ``health``.
 
     A path is reported slow when its uplink's time-mean offered load
@@ -60,11 +71,13 @@ def report_congestion(health: LinkHealth, topo, outs, *, step: int = 0,
     ``dead_capacity_frac`` of the leaf-median (a failed/downed spine —
     offered load on a dead link may legitimately decay to zero once DCQCN
     chokes the victims, but the path is still unusable).
-    Returns the quarantined path ids.
+    ``capacity`` overrides ``topo.capacity`` (the co-sim driver's per-epoch
+    fault state).  Returns the quarantined path ids.
     """
     assert health.n_paths == topo.n_paths, (health.n_paths, topo.n_paths)
-    util = path_utilization(topo, outs, leaf=leaf)  # [n_uplinks]
-    cap = np.asarray(topo.capacity)[np.asarray(topo.uplink_ids)]  # [L, S]
+    util = path_utilization(topo, outs, leaf=leaf, capacity=capacity)
+    cap_vec = np.asarray(topo.capacity if capacity is None else capacity)
+    cap = cap_vec[np.asarray(topo.uplink_ids)]  # [L, S]
     cap = cap[leaf] if leaf is not None else cap.min(axis=0)
     dead = cap < dead_capacity_frac * np.median(cap)
     slow: list[int] = []
@@ -88,11 +101,15 @@ class CoSimResult:
 def co_simulate(topo, plan, hosts, size_bytes: float, *, scheme: str = "ecmp",
                 duration_s: float = 2e-3, health: LinkHealth | None = None,
                 step: int = 0, overload: float = 1.5,
+                capacity: np.ndarray | None = None,
                 **cfg_kw) -> CoSimResult:
     """One full feedback cycle: plan -> trace -> sim -> health -> new plan.
 
-    Imports netsim lazily so ``repro.dist`` stays importable without
-    pulling the engine in (the subprocess collective tests don't need it).
+    ``capacity`` overrides ``topo.capacity`` as the sweep's traced operand
+    (a fault-schedule epoch); the multi-epoch loop lives in
+    ``dist.cosim.run_cosim``.  Imports netsim lazily so ``repro.dist``
+    stays importable without pulling the engine in (the subprocess
+    collective tests don't need it).
     """
     from repro.netsim import sweep, workloads
     from repro.netsim.engine import SimConfig
@@ -100,15 +117,17 @@ def co_simulate(topo, plan, hosts, size_bytes: float, *, scheme: str = "ecmp",
     # healthy-uplink rate for the ring cadence: the median is immune to the
     # very degraded links the co-sim exists to detect (capacity[0] would be
     # leaf0-spine0 — exactly the link a killed-spine-0 scenario nukes)
-    link_bw = float(np.median(np.asarray(topo.capacity)[np.asarray(topo.uplink_ids)]))
+    cap_vec = np.asarray(topo.capacity if capacity is None else capacity)
+    link_bw = float(np.median(cap_vec[np.asarray(topo.uplink_ids)]))
     trace = workloads.collective_trace(plan, hosts, size_bytes, link_bw=link_bw)
     cfg = SimConfig(scheme=scheme, duration_s=duration_s, **cfg_kw)
-    result, outs = sweep.run_one(topo, cfg, trace)
+    result, outs = sweep.run_one(topo, cfg, trace, capacity=capacity)
     if health is None:
         health = LinkHealth(n_paths=topo.n_paths,
                             directions=tuple(plan.directions)
                             if len(plan.directions) == topo.n_paths else None)
-    slow = report_congestion(health, topo, outs, step=step, overload=overload)
+    slow = report_congestion(health, topo, outs, step=step, overload=overload,
+                             capacity=capacity)
     new_plan = health.plan(step, n_chunks=plan.n_chunks,
                            wire_dtype=plan.wire_dtype)
     return CoSimResult(result=result, outs=outs, health=health,

@@ -22,6 +22,36 @@ from repro.launch import mesh as mesh_mod, steps
 from repro.train import checkpoint, optimizer as opt_mod
 
 
+def _cosim_plan(args):
+    """--cosim-epochs: run the multi-epoch co-simulation loop on a pod
+    fabric (one gateway host per pod, one pod per local device) and ship
+    the converged PathPlan to the grad sync — the training side exercising
+    the same plan -> fluid-sim -> quarantine -> plan cycle the netsim
+    benches measure.  With --cosim-kill-spine the loop demonstrates the
+    Fig. 11 round trip: the failed spine is quarantined while down and
+    released phi epochs after it recovers."""
+    from repro.dist import cosim
+    from repro.netsim import topology
+
+    n_ring = max(jax.local_device_count(), 2)
+    topo = topology.leaf_spine(n_ring, 4, 1, 100e9)
+    faults = ()
+    if args.cosim_kill_spine >= 0:
+        faults = (cosim.kill_spine(
+            topo, args.cosim_kill_spine % topo.n_paths, epoch=1,
+            recover_epoch=args.cosim_epochs // 2 + 1),)
+    hist = cosim.run_cosim(
+        topo, list(range(n_ring)), 8e6, scheme="ecmp",
+        epochs=args.cosim_epochs, faults=faults, phi_steps=args.cosim_phi,
+        n_chunks=args.n_chunks)
+    for line in hist.summary_lines():
+        print(f"[cosim] {line}")
+    rebuilds = sum(r.new_builds for r in hist.records[1:])
+    print(f"[cosim] final plan inactive={hist.final_plan.inactive} "
+          f"rebuilds_after_first={rebuilds}")
+    return hist.final_plan
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-3-8b")
@@ -39,6 +69,17 @@ def main():
                          "(baseline) or the SeqBalance multipath chunk rings")
     ap.add_argument("--n-chunks", type=int, default=4,
                     help="seqbalance grad-sync chunk count")
+    ap.add_argument("--cosim-epochs", type=int, default=0,
+                    help="run this many plan->fluid-sim->health co-sim "
+                         "epochs (dist.cosim) before training and seed the "
+                         "grad-sync PathPlan from the converged plan")
+    ap.add_argument("--cosim-kill-spine", type=int, default=1,
+                    help="spine failed at co-sim epoch 1 (recovering at "
+                         "epochs//2 + 1); -1 = healthy fabric")
+    ap.add_argument("--cosim-phi", type=int, default=2,
+                    help="co-sim quarantine window (planning epochs)")
+    ap.add_argument("--cosim-only", action="store_true",
+                    help="exit after the co-sim loop (CI smoke)")
     args = ap.parse_args()
 
     cfg = registry.get_config(args.arch, reduced=args.reduced)
@@ -47,6 +88,15 @@ def main():
     dcfg = pipeline.DataConfig(vocab=cfg.vocab, global_batch=args.batch, seq_len=args.seq)
     ocfg = opt_mod.AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 5),
                                total_steps=args.steps)
+
+    # co-sim first: --cosim-only must exit before any model state (init
+    # below materializes the full parameter + optimizer pytree, which at
+    # granite-3-8b scale is not something a CI smoke should pay for)
+    plan = collectives.PathPlan(n_chunks=args.n_chunks)
+    if args.cosim_epochs > 0:
+        plan = _cosim_plan(args)
+        if args.cosim_only:
+            return
 
     state = steps.init_state(jax.random.PRNGKey(0), cfg)
     start = 0
@@ -67,7 +117,6 @@ def main():
         else:
             print("[grad-sync] seqbalance needs >1 device and a batch the "
                   "device count divides — falling back to the XLA baseline")
-    plan = collectives.PathPlan(n_chunks=args.n_chunks)
     step_fn = jax.jit(steps.make_train_step(cfg, ocfg, mesh, args.grad_sync, plan))
     watchdog = elastic.StragglerPolicy(deadline_s=120.0)
     t_last = time.time()

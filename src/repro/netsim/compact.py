@@ -157,12 +157,16 @@ def plan_single_window(topo: Topology, cfg: SimConfig, arrays: tuple,
 
 def init_compact_state(
     topo: Topology, cfg: SimConfig, W: int, F_pad: int,
-    finish0: jax.Array | None = None,
+    finish0: jax.Array | None = None, capacity: jax.Array | None = None,
 ) -> CompactState:
     """Fresh all-slots-empty state.  ``finish0`` (f32[F_pad] of +inf) may be
     built OUTSIDE the jitted run and donated — it is the one state buffer
-    large enough to matter, and it aliases the finish output exactly."""
+    large enough to matter, and it aliases the finish output exactly.
+    ``capacity`` optionally overrides ``topo.capacity`` as a TRACED operand
+    (co-sim fault schedules; see ``run_core``)."""
     N = cfg.n_sub
+    line_rate = line_rate_of(topo) if capacity is None \
+        else capacity[topo.n_links - 2 * topo.n_hosts]
     if finish0 is None:
         finish0 = jnp.full((F_pad,), jnp.inf, jnp.float32)
     hf = topo.n_fabric_hops
@@ -182,7 +186,7 @@ def init_compact_state(
         remaining=jnp.zeros((W, N), jnp.float32),
         path=jnp.full((W, N), -1, jnp.int32),
         sub_done=jnp.zeros((W, N), bool),
-        cc=dcqcn_mod.init_state((W, N), line_rate_of(topo)),
+        cc=dcqcn_mod.init_state((W, N), line_rate),
         cqe_bitmap=jnp.zeros((W,), jnp.uint32),
         admitted=jnp.zeros((), jnp.int32),
         finish=finish0,
@@ -196,7 +200,8 @@ def init_compact_state(
 
 
 def build_compact_sim(topo: Topology, cfg: SimConfig, trace_arrays, W: int, F_pad: int,
-                      A: int = 256, gate_admission: bool = False):
+                      A: int = 256, gate_admission: bool = False,
+                      capacity: jax.Array | None = None):
     """trace_arrays = (sizes, arrivals, src, dst, fid, valid), SORTED by
     arrival (invalid flows last, arrival=+inf), padded to F_pad.
     ``A`` is the admission lane width: at most A flows admit per step, and
@@ -207,6 +212,12 @@ def build_compact_sim(topo: Topology, cfg: SimConfig, trace_arrays, W: int, F_pa
     the horizon, so un-vmapped runs then skip the whole O(W) block.  Only
     set it for programs that will NOT be vmapped: vmap lowers cond to
     both-branches-plus-select, which pays instead of saves.
+    ``capacity`` (f32[n_links + 1], sentinel slot included) overrides
+    ``topo.capacity`` as a TRACED operand: co-sim fault schedules mutate
+    link capacities every planning epoch, and a traced capacity lets all
+    epochs share ONE compiled program instead of recompiling per fault
+    state.  ``None`` keeps the topology's capacity baked in as a constant
+    (bit-identical to the pre-traced-capacity programs).
     Returns (init_state, step_fn, phases) — ``phases`` maps the profile
     phase names (admit / cascade / dcqcn / finish) to the closures
     ``step_fn`` composes, for benchmarks/run.py --profile."""
@@ -216,7 +227,8 @@ def build_compact_sim(topo: Topology, cfg: SimConfig, trace_arrays, W: int, F_pa
     nl = topo.n_links
 
     fc = flow_constants(topo, cfg, sizes, src, dst, fid)
-    line_rate = line_rate_of(topo)
+    cap_vec = topo.capacity if capacity is None else jnp.asarray(capacity)
+    line_rate = cap_vec[nl - 2 * topo.n_hosts]  # host_tx[0] bw
     qmask = dataplane.queue_mask_for(topo)
     dparams = cfg.dcqcn
 
@@ -224,7 +236,7 @@ def build_compact_sim(topo: Topology, cfg: SimConfig, trace_arrays, W: int, F_pa
         assert topo.kind == "leaf_spine", f"{cfg.scheme} is 2-tier only (paper §IV.B)"
 
     def init_state() -> CompactState:
-        return init_compact_state(topo, cfg, W, F_pad)
+        return init_compact_state(topo, cfg, W, F_pad, capacity=capacity)
 
     full_cqe = (jnp.uint32(1) << jnp.uint32(N)) - jnp.uint32(1)
     # schemes whose sub-flow paths are pinned at admission carry their
@@ -366,10 +378,10 @@ def build_compact_sim(topo: Topology, cfg: SimConfig, trace_arrays, W: int, F_pa
         if cfg.scheme == "drill":
             arrival, thr, w_spray, pq = dataplane.drill_spray(
                 topo, state.queue, rc[:, 0], ca.src, ca.dst, ca.sleaf, ca.dleaf,
-                active[:, 0:1], cfg.drill_q0,
+                active[:, 0:1], cfg.drill_q0, capacity=cap_vec,
             )
             new_queue, p_mark = dataplane.integrate_queue(
-                state.queue, arrival, topo.capacity, qmask, dparams,
+                state.queue, arrival, cap_vec, qmask, dparams,
                 dt=cfg.dt, qmax_bytes=cfg.qmax_bytes, n_links=nl,
             )
             p_sub, p_sub_fabric = dataplane.drill_mark_probs(
@@ -378,6 +390,7 @@ def build_compact_sim(topo: Topology, cfg: SimConfig, trace_arrays, W: int, F_pa
             thr = thr * dataplane.drill_gbn_factor(
                 topo, pq, w_spray, rc[:, 0], mtu_bytes=dparams.mtu_bytes,
                 jitter_mtus=cfg.drill_jitter_mtus, window_pkts=cfg.gbn_window_pkts,
+                capacity=cap_vec,
             )
             thr = thr[:, None]  # [W, 1]
         else:
@@ -387,7 +400,7 @@ def build_compact_sim(topo: Topology, cfg: SimConfig, trace_arrays, W: int, F_pa
                 fab = topo.fabric_links(
                     ca.sleaf, ca.dleaf, state.path[:, 0])[:, None, :]
             arrival, new_queue, p_mark, thr = dataplane.cascade_nic(
-                fab, ca.tx, ca.rx, rc, state.queue, topo.capacity, qmask,
+                fab, ca.tx, ca.rx, rc, state.queue, cap_vec, qmask,
                 n_links=nl, kmin=dparams.kmin_bytes, kmax=dparams.kmax_bytes,
                 pmax=dparams.pmax, dt=cfg.dt, qmax_bytes=cfg.qmax_bytes,
                 backend=cfg.dataplane,
@@ -495,11 +508,15 @@ def plan_chunks(cfg: SimConfig, n_steps: int) -> tuple[int, int, int]:
 
 def run_core(topo: Topology, cfg: SimConfig, W: int, F_pad: int, A: int,
              n_steps: int, trace_arrays, finish0: jax.Array,
+             capacity: jax.Array | None = None,
              gate_admission: bool = False):
     """Jit-friendly core: sorted/padded trace arrays + a donatable +inf
     finish buffer in, (finish[F_pad] in sorted order, cnp_pkts, spill_steps,
     per-step outputs) out.  Wrapped and cached by netsim/sweep.py;
     vmap-able over a leading batch axis of (trace_arrays, finish0).
+    ``capacity`` (f32[n_links + 1]) is the TRACED link-capacity operand for
+    co-sim fault schedules — see ``build_compact_sim``; None keeps
+    ``topo.capacity`` baked in as a compile-time constant.
 
     The horizon runs as K-step ``lax.scan`` chunks inside a ``while_loop``
     with EARLY EXIT: once every flow has been admitted and finished and the
@@ -512,8 +529,9 @@ def run_core(topo: Topology, cfg: SimConfig, W: int, F_pad: int, A: int,
     inside the chunk before it is written out, so only ``[T/s, L, S]`` is
     ever materialized."""
     _, step_fn, _ = build_compact_sim(topo, cfg, trace_arrays, W, F_pad, A,
-                                      gate_admission=gate_admission)
-    init = init_compact_state(topo, cfg, W, F_pad, finish0)
+                                      gate_admission=gate_admission,
+                                      capacity=capacity)
+    init = init_compact_state(topo, cfg, W, F_pad, finish0, capacity=capacity)
     n_valid = jnp.sum(jnp.asarray(trace_arrays[5]).astype(jnp.int32))
     nl = topo.n_links
     uplink_shape = np.asarray(topo.uplink_ids).shape

@@ -295,6 +295,7 @@ def drill_spray(
     dst_leaf: jax.Array,  # i32[n]
     active0: jax.Array,  # bool[n, 1]
     drill_q0: float,
+    capacity: jax.Array | None = None,  # traced override of topo.capacity
 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """DRILL's per-packet spray on a 2-tier Clos: inverse-queue weights over
     all paths, cascaded host_tx -> uplink -> downlink -> host_rx.
@@ -309,6 +310,7 @@ def drill_spray(
     """
     from repro.core import baselines
 
+    cap = topo.capacity if capacity is None else capacity
     nl = topo.n_links
     L_, S_ = topo.n_leaf, topo.n_paths
     h0 = nl - 2 * topo.n_hosts
@@ -321,19 +323,19 @@ def drill_spray(
     # hop 0: host NIC
     tx_load = jax.ops.segment_sum(rc0, src, num_segments=topo.n_hosts)
     arrival = arrival.at[h0 : h0 + topo.n_hosts].add(tx_load)
-    s_tx = jnp.minimum(1.0, topo.capacity[h0 + src] / jnp.maximum(tx_load[src], 1.0))
+    s_tx = jnp.minimum(1.0, cap[h0 + src] / jnp.maximum(tx_load[src], 1.0))
     r0 = rc0 * s_tx  # [n]
     # hop 1: uplinks (per-path split)
     r0w = r0[:, None] * w  # [n, P]
     up_load = oh_s.T @ r0w  # [L, P]
     arrival = arrival.at[up0 : up0 + L_ * S_].add(up_load.reshape(-1))
-    cap_up = topo.capacity[up0 : up0 + L_ * S_].reshape(L_, S_)
+    cap_up = cap[up0 : up0 + L_ * S_].reshape(L_, S_)
     s_up = jnp.minimum(1.0, cap_up / jnp.maximum(up_load, 1.0))
     r1 = r0w * (oh_s @ s_up)  # [n, P]
     # hop 2: downlinks
     dn_load = oh_d.T @ r1  # [L, P] (by dst)
     arrival = arrival.at[L_ * S_ : 2 * L_ * S_].add(dn_load.T.reshape(-1))
-    cap_dn = topo.capacity[L_ * S_ : 2 * L_ * S_].reshape(S_, L_)
+    cap_dn = cap[L_ * S_ : 2 * L_ * S_].reshape(S_, L_)
     s_dn = jnp.minimum(1.0, cap_dn.T / jnp.maximum(dn_load, 1.0))  # [L, P]
     r2 = r1 * (oh_d @ s_dn)  # [n, P]
     # hop 3: receiver NIC
@@ -341,7 +343,7 @@ def drill_spray(
     rx_load = jax.ops.segment_sum(r2sum, dst, num_segments=topo.n_hosts)
     arrival = arrival.at[h0 + topo.n_hosts : h0 + 2 * topo.n_hosts].add(rx_load)
     s_rx = jnp.minimum(
-        1.0, topo.capacity[h0 + topo.n_hosts + dst] / jnp.maximum(rx_load[dst], 1.0)
+        1.0, cap[h0 + topo.n_hosts + dst] / jnp.maximum(rx_load[dst], 1.0)
     )
     thr = r2sum * s_rx  # [n]
     return arrival, thr, w, pq
@@ -377,6 +379,7 @@ def drill_gbn_factor(
     mtu_bytes: float,
     jitter_mtus: float,
     window_pkts: float,
+    capacity: jax.Array | None = None,  # traced override of topo.capacity
 ) -> jax.Array:
     """Go-back-N goodput penalty for DRILL's spray: packets of ONE QP sprayed
     over paths whose queueing delays differ get reordered; even with equal
@@ -386,7 +389,8 @@ def drill_gbn_factor(
     from repro.core import gbn
 
     P = topo.n_paths
-    up_cap = topo.capacity[0]  # uplink block starts at 0 (2-tier layout)
+    cap = topo.capacity if capacity is None else capacity
+    up_cap = cap[0]  # uplink block starts at 0 (2-tier layout)
     d_path = pq * 8.0 / jnp.maximum(up_cap, 1.0)  # [n, P] seconds
     used = w > (0.5 / P)
     dmax = jnp.max(jnp.where(used, d_path, -jnp.inf), -1)

@@ -52,6 +52,28 @@ def throughput_imbalance(outs: StepOutputs, sample_every: int = 10, *,
     return imb[avg > 1e6].ravel()
 
 
+def fct_samples(state, trace: Trace,
+                horizon_s: float | None = None) -> tuple[np.ndarray, float]:
+    """Per-flow FCT population for CDFs / convergence curves.
+
+    Unlike ``fct_stats`` (completed flows only), flows still unfinished at
+    the end of the horizon are CENSORED at it (fct = horizon - arrival)
+    rather than dropped: a killed spine starves its flows outright, and a
+    p99 over survivors would report the disaster epoch as healthy.  Returns
+    (fct[n_valid], completion_rate); with ``horizon_s=None`` unfinished
+    flows keep +inf (caller beware of percentile poisoning).
+    """
+    finish = np.asarray(state.finish)
+    valid = np.asarray(trace.valid, bool)
+    arrivals = np.asarray(trace.arrivals)
+    done = np.isfinite(finish) & valid
+    completion = float(done.sum() / max(valid.sum(), 1))
+    f = finish[valid]
+    if horizon_s is not None:
+        f = np.minimum(f, np.float32(horizon_s))
+    return (f - arrivals[valid]).astype(np.float64), completion
+
+
 def cdf(samples: np.ndarray, points: int = 50) -> tuple[np.ndarray, np.ndarray]:
     xs = np.sort(samples)
     ys = np.arange(1, len(xs) + 1) / len(xs)

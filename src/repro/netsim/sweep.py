@@ -52,8 +52,19 @@ F_BUCKET = 2048
 W_BUCKET = 256
 
 _JIT_CACHE: dict = {}
+_CACHE_STATS = {"builds": 0, "hits": 0}
 _COMPILE_CACHE_SET = False
 _COMPILE_CACHE_LOCK = threading.Lock()
+
+
+def cache_stats() -> dict:
+    """Executable-cache counters: ``builds`` = programs constructed (one XLA
+    compile each at first call), ``hits`` = dispatches served by an already
+    built program.  The co-sim driver (``dist.cosim``) reads this per epoch
+    to prove the compile-reuse-across-capacity-changes contract: with
+    ``capacity`` passed as a traced operand, every epoch after the first
+    must add zero builds."""
+    return dict(_CACHE_STATS)
 
 
 def enable_compile_cache() -> str | None:
@@ -101,14 +112,22 @@ def enable_compile_cache() -> str | None:
 def clear_cache() -> None:
     """Drop compiled executables (benchmarks call this to time cold runs)."""
     _JIT_CACHE.clear()
+    _CACHE_STATS["builds"] = 0
+    _CACHE_STATS["hits"] = 0
 
 
-def _topo_key(topo: Topology) -> tuple:
+def _topo_key(topo: Topology, traced_cap: bool = False) -> tuple:
     """Value key so structurally identical Topology instances share one
     compilation.  Computed fresh every call — an id()-keyed memo would go
     stale when a collected topology's address is reused by a different one
-    (the capacity hash is microseconds next to any simulation)."""
-    cap = hashlib.sha1(np.asarray(topo.capacity).tobytes()).hexdigest()[:16]
+    (the capacity hash is microseconds next to any simulation).
+
+    ``traced_cap`` marks programs that take link capacity as a TRACED
+    operand (co-sim fault schedules): the capacity VALUE then must not key
+    the executable — every fault state shares one compilation — so the
+    hash slot carries a sentinel instead."""
+    cap = "traced" if traced_cap else \
+        hashlib.sha1(np.asarray(topo.capacity).tobytes()).hexdigest()[:16]
     return (topo.kind, topo.n_leaf, topo.n_paths, topo.hosts_per_leaf,
             topo.n_links, topo.base_rtt_s, cap)
 
@@ -134,22 +153,25 @@ def _gated_b1(topo: Topology, cfg: SimConfig, W: int, F_pad: int, A: int,
     would lower it to both-branches + select) — once arrivals drain (3/4
     of the horizon on paper traces) the O(W) admission work is skipped
     outright.  Shared by the plain B=1 and the one-sim-per-device pmap
-    dispatches."""
+    dispatches.  Traced-capacity dispatches pass a third, UNBATCHED
+    capacity operand; the ``*cap`` varargs forward it to ``run_core``
+    unchanged (same callable serves both arities — the executable cache
+    key distinguishes them via ``_topo_key``'s traced sentinel)."""
     core = functools.partial(compact.run_core, topo, cfg, W, F_pad, A,
                              n_steps, gate_admission=True)
 
-    def fn_one(trace_arrays, finish0):
+    def fn_one(trace_arrays, finish0, *cap):
         squeeze = lambda a: jnp.squeeze(a, 0)
         out = core(jax.tree.map(squeeze, trace_arrays),
-                   jnp.squeeze(finish0, 0))
+                   jnp.squeeze(finish0, 0), *cap)
         return jax.tree.map(lambda a: a[None], out)
 
     return fn_one
 
 
 def _compiled(topo: Topology, cfg: SimConfig, W: int, F_pad: int, A: int,
-              n_steps: int, batch: int):
-    key = (_topo_key(topo), cfg, W, F_pad, A, n_steps, batch)
+              n_steps: int, batch: int, traced_cap: bool = False):
+    key = (_topo_key(topo, traced_cap), cfg, W, F_pad, A, n_steps, batch)
     fn = _JIT_CACHE.get(key)
     if fn is None:
         if batch == 1:
@@ -158,8 +180,12 @@ def _compiled(topo: Topology, cfg: SimConfig, W: int, F_pad: int, A: int,
         else:
             core = functools.partial(compact.run_core, topo, cfg, W, F_pad,
                                      A, n_steps)
-            fn = jax.jit(jax.vmap(core), donate_argnums=(1,))
+            in_axes = (0, 0, None) if traced_cap else (0, 0)
+            fn = jax.jit(jax.vmap(core, in_axes=in_axes), donate_argnums=(1,))
         _JIT_CACHE[key] = fn
+        _CACHE_STATS["builds"] += 1
+    else:
+        _CACHE_STATS["hits"] += 1
     return fn
 
 
@@ -172,12 +198,15 @@ def sweep_devices() -> int:
 
 
 def _compiled_sharded(topo: Topology, cfg: SimConfig, W: int, F_pad: int,
-                      A: int, n_steps: int, per_dev: int, n_dev: int):
+                      A: int, n_steps: int, per_dev: int, n_dev: int,
+                      traced_cap: bool = False):
     """pmap-of-vmap executable: inputs carry a leading [n_dev, per_dev]
     batch, one shard per local device.  Each shard runs the identical
     vmapped compact scan, so per-sim results match the single-device path
-    (same program, same shapes — only the dispatch is parallel)."""
-    key = (_topo_key(topo), cfg, W, F_pad, A, n_steps, per_dev, n_dev, "pmap")
+    (same program, same shapes — only the dispatch is parallel).  A traced
+    capacity operand is broadcast to every device (in_axes None)."""
+    key = (_topo_key(topo, traced_cap), cfg, W, F_pad, A, n_steps, per_dev,
+           n_dev, "pmap")
     fn = _JIT_CACHE.get(key)
     if fn is None:
         if per_dev == 1:
@@ -185,11 +214,17 @@ def _compiled_sharded(topo: Topology, cfg: SimConfig, W: int, F_pad: int,
             # batch==1 path
             inner = _gated_b1(topo, cfg, W, F_pad, A, n_steps)
         else:
-            inner = jax.vmap(functools.partial(
-                compact.run_core, topo, cfg, W, F_pad, A, n_steps))
+            core = functools.partial(
+                compact.run_core, topo, cfg, W, F_pad, A, n_steps)
+            inner = jax.vmap(core, in_axes=(0, 0, None)) if traced_cap \
+                else jax.vmap(core)
+        in_axes = (0, 0, None) if traced_cap else (0, 0)
         fn = jax.pmap(inner, devices=jax.local_devices()[:n_dev],
-                      donate_argnums=(1,))
+                      donate_argnums=(1,), in_axes=in_axes)
         _JIT_CACHE[key] = fn
+        _CACHE_STATS["builds"] += 1
+    else:
+        _CACHE_STATS["hits"] += 1
     return fn
 
 
@@ -257,13 +292,17 @@ def batch_mode() -> str:
     return "persim" if jax.default_backend() == "cpu" else "vmap"
 
 
-def _dispatch(topo, cfg, W, F_pad, A, n_steps, stacked, B):
+def _dispatch(topo, cfg, W, F_pad, A, n_steps, stacked, B, capacity=None):
     """Run a stacked [B, ...] batch, returning (finish, cnp, spill, outs)
     with a leading [B] axis.  >1 local device: pad B up to a multiple of
     the device count (duplicating the last row — padding results are
     sliced off) and run one pmap-of-vmap, one batch shard per device.
     Single device: per-sim B=1 executions (cpu) or one jitted vmap — see
-    ``batch_mode``."""
+    ``batch_mode``.  ``capacity`` (f32[n_links + 1], shared by the whole
+    batch) rides along as a traced operand when given — fault-schedule
+    sweeps then reuse one executable across capacity changes."""
+    traced_cap = capacity is not None
+    cap = (jnp.asarray(capacity, jnp.float32),) if traced_cap else ()
     D = sweep_devices()
     if D > 1 and B > 1:
         D = min(D, B)
@@ -277,9 +316,10 @@ def _dispatch(topo, cfg, W, F_pad, A, n_steps, stacked, B):
         shaped = tuple(
             jnp.asarray(a.reshape((D, per) + a.shape[1:])) for a in stacked
         )
-        fn = _compiled_sharded(topo, cfg, W, F_pad, A, n_steps, per, D)
+        fn = _compiled_sharded(topo, cfg, W, F_pad, A, n_steps, per, D,
+                               traced_cap)
         finish0 = jnp.full((D, per, F_pad), jnp.inf, jnp.float32)
-        out = fn(shaped, finish0)
+        out = fn(shaped, finish0, *cap)
         return jax.tree.map(
             lambda a: jnp.reshape(a, (Bp,) + a.shape[2:])[:B], out
         )
@@ -288,16 +328,16 @@ def _dispatch(topo, cfg, W, F_pad, A, n_steps, stacked, B):
         # program serves the whole loop
         parts = [
             _dispatch(topo, cfg, W, F_pad, A, n_steps,
-                      tuple(a[i:i + 1] for a in stacked), 1)
+                      tuple(a[i:i + 1] for a in stacked), 1, capacity)
             for i in range(B)
         ]
         return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *parts)
-    fn = _compiled(topo, cfg, W, F_pad, A, n_steps, B)
+    fn = _compiled(topo, cfg, W, F_pad, A, n_steps, B, traced_cap)
     finish0 = jnp.full((B, F_pad), jnp.inf, jnp.float32)
-    return fn(tuple(jnp.asarray(a) for a in stacked), finish0)
+    return fn(tuple(jnp.asarray(a) for a in stacked), finish0, *cap)
 
 
-def _run_group(topo, cfg, prepped, n_steps, window_slots):
+def _run_group(topo, cfg, prepped, n_steps, window_slots, capacity=None):
     """One vmapped run over traces sharing an F_pad bucket, with the
     spill-retry loop: the concurrency bound is a heuristic, so any sim that
     reports spill_steps > 0 (an arrived flow found no free slot — its
@@ -325,7 +365,7 @@ def _run_group(topo, cfg, prepped, n_steps, window_slots):
         )
         t0 = time.time()
         finish, cnp, spill, outs = _dispatch(
-            topo, cfg, W, F_pad, A, n_steps, stacked, len(pending))
+            topo, cfg, W, F_pad, A, n_steps, stacked, len(pending), capacity)
         spill = np.asarray(spill)
         finish = np.asarray(finish)
         cnp = np.asarray(cnp)
@@ -361,10 +401,18 @@ def run_batch(
     traces: list[Trace],
     *,
     window_slots: int | None = None,
+    capacity: np.ndarray | None = None,
 ) -> tuple[list[compact.CompactResult], list[StepOutputs]]:
     """Run every trace under one (scheme, topology) static pair as vmapped,
     donated, cached-compile computations — one per F_pad shape bucket, so a
-    small trace is never padded to a 30x larger sibling's shape."""
+    small trace is never padded to a 30x larger sibling's shape.
+
+    ``capacity`` (f32[n_links + 1], sentinel slot included) overrides
+    ``topo.capacity`` as a TRACED operand shared by the whole batch: co-sim
+    fault schedules change link capacities per planning epoch, and threading
+    them as data means every epoch reuses the one compiled program (the
+    executable cache keys on a "traced" sentinel instead of the capacity
+    hash — see ``cache_stats``)."""
     assert traces, "empty sweep"
     enable_compile_cache()
     prepped = [compact.sort_trace(t) for t in traces]
@@ -376,7 +424,7 @@ def run_batch(
     outs_list: list = [None] * len(traces)
     for idxs in groups.values():
         res, outs = _run_group(topo, cfg, [prepped[i] for i in idxs], n_steps,
-                               window_slots)
+                               window_slots, capacity)
         for i, r, o in zip(idxs, res, outs):
             results[i] = r
             outs_list[i] = o
@@ -384,8 +432,10 @@ def run_batch(
 
 
 def run_one(topo: Topology, cfg: SimConfig, trace: Trace, *,
-            window_slots: int | None = None):
-    results, outs = run_batch(topo, cfg, [trace], window_slots=window_slots)
+            window_slots: int | None = None,
+            capacity: np.ndarray | None = None):
+    results, outs = run_batch(topo, cfg, [trace], window_slots=window_slots,
+                              capacity=capacity)
     return results[0], outs[0]
 
 
@@ -398,17 +448,39 @@ def default_workers(n_jobs: int) -> int:
     return max(1, min(n_jobs, os.cpu_count() or 1))
 
 
+def _run_job(job):
+    """One ``run_jobs`` entry.  Three spellings:
+
+      * ``(topo, cfg, traces)``           — the classic per-scheme sweep;
+      * ``(topo, cfg, traces, kwargs)``   — same, with ``run_batch`` keyword
+        overrides (``capacity=...`` for fault-schedule grids,
+        ``window_slots=...``);
+      * any zero-argument callable        — an arbitrary multi-step job,
+        e.g. one ``dist.cosim.run_cosim`` epoch loop per (scheme, ring,
+        fault, seed) grid point.  The callable runs on the worker thread
+        and its sweeps go through the same cached-executable dispatch.
+    """
+    if callable(job):
+        return job()
+    topo, cfg, traces, *rest = job
+    kw = dict(rest[0]) if rest else {}
+    return run_batch(topo, cfg, traces, **kw)
+
+
 def run_jobs(
-    jobs: list[tuple[Topology, SimConfig, list[Trace]]],
+    jobs: list,
     *,
     workers: int | None = None,
-) -> list[tuple[list[compact.CompactResult], list[StepOutputs]]]:
-    """Run independent sweep jobs (e.g. one per scheme) concurrently.
+) -> list:
+    """Run independent sweep jobs (e.g. one per scheme, or one co-sim epoch
+    loop per grid point — see ``_run_job`` for the accepted spellings)
+    concurrently.
 
     XLA's CPU executables release the GIL, so a small thread pool overlaps
     independent compiles and scans across cores — the five-scheme Fig. 12
-    sweep is embarrassingly parallel at this level.  Results are returned
-    in job order, identical to serial execution.
+    sweep and the (scheme x ring x fault x seed) co-sim grids are
+    embarrassingly parallel at this level.  Results are returned in job
+    order, identical to serial execution.
 
     Worker count resolution: explicit ``workers`` argument, else the
     REPRO_SWEEP_WORKERS env var, else a capped ``os.cpu_count()``."""
@@ -418,7 +490,7 @@ def run_jobs(
     if workers is None:
         workers = default_workers(len(jobs))
     if workers == 1 or len(jobs) == 1:
-        return [run_batch(t, c, tr) for (t, c, tr) in jobs]
+        return [_run_job(j) for j in jobs]
     with cf.ThreadPoolExecutor(max_workers=workers) as pool:
-        futs = [pool.submit(run_batch, t, c, tr) for (t, c, tr) in jobs]
+        futs = [pool.submit(_run_job, j) for j in jobs]
         return [f.result() for f in futs]

@@ -237,6 +237,39 @@ def three_tier(
     )
 
 
+def spine_links(topo: Topology, spine: int) -> tuple[int, ...]:
+    """Flat link ids that die with one fabric switch — the unit of the
+    co-sim fault schedules (``dist.cosim``).
+
+    * ``leaf_spine``: ``spine`` is a spine switch — its leaf uplinks
+      up[l, spine] and downlinks down[spine, l] for every leaf l.
+    * ``three_tier``: ``spine`` is an AGGREGATION switch a — the ToR
+      uplinks ta[t, a], agg-core links ac[a, c] / ca[c, a], and ToR
+      downlinks at[a, t].  Killing it takes out ToR uplink a on every ToR,
+      i.e. exactly the ``n_core`` paths (a, *) that
+      ``dist.netfeed._paths_for_uplink`` quarantines.
+    """
+    if topo.kind == "leaf_spine":
+        L, S = topo.n_leaf, topo.n_paths
+        assert 0 <= spine < S, (spine, S)
+        return tuple(l * S + spine for l in range(L)) + tuple(
+            L * S + spine * L + l for l in range(L))
+    assert topo.kind == "three_tier", topo.kind
+    T = topo.n_leaf
+    A = topo.uplink_ids.shape[1]
+    C = topo.n_paths // A
+    assert 0 <= spine < A, (spine, A)
+    ta0, ac0 = 0, T * A
+    ca0 = T * A + A * C
+    at0 = T * A + 2 * A * C
+    return (
+        tuple(ta0 + t * A + spine for t in range(T))
+        + tuple(ac0 + spine * C + c for c in range(C))
+        + tuple(ca0 + c * A + spine for c in range(C))
+        + tuple(at0 + spine * T + t for t in range(T))
+    )
+
+
 def testbed_symmetric() -> Topology:
     """Paper Fig. 8(a): 2 leaves x 4 spines, 3 hosts/leaf, all 40G."""
     return leaf_spine(2, 4, 3, 40e9, base_rtt_s=4e-6)

@@ -168,6 +168,38 @@ def poisson_trace(cfg: TraceConfig) -> Trace:
     )
 
 
+def _ecmp_steered_fids(src: np.ndarray, dst: np.ndarray, base_fid: np.ndarray,
+                       target_path: np.ndarray, n_paths: int) -> np.ndarray:
+    """Per-QP flow ids whose engine-side ECMP hash lands on the planned
+    fabric path — the fluid-model analog of steering a RoCE QP's UDP source
+    port so the fabric's five-tuple hash picks the path the planner chose
+    (how PathTag-less deployments pin multipath today).  Mirrors
+    ``engine.flow_constants``'s per-flow five-tuple (sport from
+    ``fmix32(fid)``, dport 4791); ``tests/test_cosim.py`` pins the two
+    against each other so they cannot drift silently.
+
+    For each QP the candidate ids ``base + k * golden`` are hashed in one
+    vectorized sweep and the first hit wins; a QP with no hit in the ~32x
+    oversampled candidate set (probability ~(1-1/P)^(32P) ~ 1e-14) keeps
+    its base id."""
+    import jax.numpy as jnp
+
+    from repro.core import hashing, routing
+
+    K = int(min(32 * n_paths, 16384))
+    ks = np.arange(K, dtype=np.uint32) * np.uint32(0x9E3779B1)
+    cand = base_fid.astype(np.uint32)[:, None] + ks[None, :]  # [Q, K] wraps
+    sport = jnp.uint32(0xB000) + (hashing.fmix32(jnp.asarray(cand))
+                                  % jnp.uint32(0x3FFF))
+    dport = jnp.full(cand.shape, 4791, jnp.uint32)
+    p = routing.ecmp_paths(
+        jnp.asarray(src, np.uint32)[:, None], jnp.asarray(dst, np.uint32)[:, None],
+        sport, dport, n_paths)
+    hit = np.asarray(p) == np.asarray(target_path, np.int32)[:, None]
+    k = np.where(hit.any(axis=1), hit.argmax(axis=1), 0)
+    return cand[np.arange(cand.shape[0]), k]
+
+
 def collective_trace(
     plan,
     hosts: list[int] | np.ndarray,
@@ -178,6 +210,7 @@ def collective_trace(
     rounds: int | None = None,
     round_gap_s: float | None = None,
     seed: int = 0,
+    steer_paths: int | None = None,
 ) -> Trace:
     """AI-training traffic mode: the ring schedule of a grad-sync PathPlan
     (``repro.dist.collectives.PathPlan`` — duck-typed: anything with
@@ -199,6 +232,22 @@ def collective_trace(
 
     ``round_gap_s`` defaults to the segment serialization time at
     ``link_bw`` (the idealized bulk-synchronous cadence).
+
+    ``steer_paths`` (= the topology's ``n_paths``) turns the plan into a
+    BINDING route: each QP's flow id is chosen so the engine's ECMP
+    five-tuple hash maps it onto its planned fabric path
+    (``_ecmp_steered_fids`` — UDP-source-port steering in the fluid
+    model).  The chunk -> path map supplies the ring DIRECTIONS; the
+    steered fabric target is additionally diversified per member —
+    member i's chunk-c QP rides active_path[(i * n_chunks + c) % n_active]
+    — because on a 3-tier fabric a globally shared per-chunk path would
+    funnel every member's chunk-c flow through one 100G agg-core link
+    (n-fold overload by construction), while per-member spreading is
+    exactly what per-QP source ports give a real deployment.  Quarantined
+    paths are excluded from the spread, so the co-sim loop can actually
+    route AROUND them — the whole Fig. 11 convergence story.  Without
+    ``steer_paths`` the plan only shapes the traffic matrix and the
+    fabric re-rolls paths by hash.
     """
     hosts = np.asarray(hosts, np.int64)
     n = int(hosts.size)
@@ -212,6 +261,24 @@ def collective_trace(
     n_rounds = 2 * (n - 1) if rounds is None else int(rounds)
 
     base = (seed * 0x9E3779B9) & 0xFFFFFFFF
+    # one QP per (chunk, member), persistent across rounds
+    qp_fid = np.array(
+        [[((c * n + i) * 2654435761 + base) & 0xFFFFFFFF for i in range(n)]
+         for c in range(n_chunks)], np.uint32)
+    if steer_paths is not None:
+        assert max(paths) < steer_paths, (paths, steer_paths)
+        active = [p for p, dead in enumerate(plan.inactive)
+                  if not dead and p < steer_paths] or [0]
+        q_src = np.array([[hosts[i] for i in range(n)]
+                          for c in range(n_chunks)], np.int64)
+        q_dst = np.array([[hosts[(i + dirs[c]) % n] for i in range(n)]
+                          for c in range(n_chunks)], np.int64)
+        q_target = np.array(
+            [[active[(i * n_chunks + c) % len(active)] for i in range(n)]
+             for c in range(n_chunks)], np.int32)
+        qp_fid = _ecmp_steered_fids(
+            q_src.reshape(-1), q_dst.reshape(-1), qp_fid.reshape(-1),
+            q_target.reshape(-1), steer_paths).reshape(n_chunks, n)
     sizes, arrivals, src, dst, flow_id = [], [], [], [], []
     for r in range(n_rounds):
         t = start_s + r * round_gap_s
@@ -221,8 +288,7 @@ def collective_trace(
                 arrivals.append(t)
                 src.append(hosts[i])
                 dst.append(hosts[(i + d) % n])
-                # one QP per (chunk, member), persistent across rounds
-                flow_id.append(((c * n + i) * 2654435761 + base) & 0xFFFFFFFF)
+                flow_id.append(qp_fid[c, i])
     f = len(sizes)
     flow_id = np.asarray(flow_id, np.uint32)
     return Trace(

@@ -122,6 +122,123 @@ def test_collective_trace_shape_and_schedule():
     assert (np.sort(tr2.arrivals) == np.sort(tr.arrivals)).all()
 
 
+# ------------------------------------------------------------- phi expiry
+def test_phi_expiry_releases_exactly_phi_steps_after_last_report():
+    """A quarantined path re-enters LinkHealth.plan at EXACTLY
+    last_report + phi_steps — one step earlier it is still out, and a
+    refreshing report pushes the release out by the same amount."""
+    lh = LinkHealth(n_paths=6, phi_steps=5)
+    lh.report_slow(2, step=10)
+    assert lh.expiry(2) == 15
+    assert lh.plan(14).inactive[2] and 2 not in lh.plan(14).chunk_paths()
+    assert not lh.plan(15).inactive[2]  # released exactly at +phi
+    assert 2 in lh.plan(15, n_chunks=12).chunk_paths()
+    # refresh: a new report EXTENDS the window from the newest report
+    lh.report_slow(2, step=13)
+    assert lh.expiry(2) == 18
+    assert lh.plan(17).inactive[2] and not lh.plan(18).inactive[2]
+    # a stale (out-of-order) report must not shrink the window
+    lh.report_slow(2, step=11)
+    assert lh.expiry(2) == 18
+
+
+def test_phi_expiry_seeded_regression():
+    """Randomized report patterns: inactive(step) is always equivalent to
+    "strictly fewer than phi_steps steps since the newest report"."""
+    rng = np.random.default_rng(7)
+    for _ in range(200):
+        n_paths = int(rng.integers(1, 8))
+        phi = int(rng.integers(1, 9))
+        lh = LinkHealth(n_paths=n_paths, phi_steps=phi)
+        newest = {}
+        for _ in range(int(rng.integers(1, 12))):
+            p = int(rng.integers(0, n_paths))
+            s = int(rng.integers(0, 30))
+            lh.report_slow(p, s)
+            newest[p] = max(newest.get(p, -1), s)
+        probe = int(rng.integers(0, 45))
+        expect = tuple(
+            p in newest and probe < newest[p] + phi for p in range(n_paths)
+        )
+        assert lh.inactive(probe) == expect
+        for p, s in newest.items():
+            assert lh.expiry(p) == s + phi
+
+
+# ------------------------------------------- three_tier uplink -> path fanout
+def _three_tier_small():
+    return topology.three_tier(n_tor=3, n_agg=4, n_core=2, hosts_per_tor=2,
+                               bw_tor_agg=40e9, bw_agg_core=10e9,
+                               host_bw=10e9)
+
+
+def _check_uplink_quarantine(topo, overloaded: set[tuple[int, int]]):
+    """Overload the given (leaf, uplink) pairs and assert report_congestion
+    quarantines exactly the n_core paths of each overloaded uplink."""
+    T, A = topo.uplink_ids.shape
+    C = topo.n_paths // A
+    cap = np.asarray(topo.capacity)[np.asarray(topo.uplink_ids)]  # [T, A]
+    up = np.zeros((5, T, A), np.float32)
+    for (l, a) in overloaded:
+        up[:, l, a] = 3.0 * cap[l, a]
+    lh = LinkHealth(n_paths=topo.n_paths, phi_steps=4)
+    slow = netfeed.report_congestion(lh, topo, _FakeOuts(up), step=0,
+                                     overload=1.5)
+    expect = {a * C + c for (_, a) in overloaded for c in range(C)}
+    assert set(slow) == expect
+    assert lh.inactive(1) == tuple(p in expect for p in range(topo.n_paths))
+
+
+def test_three_tier_uplink_quarantines_exactly_its_core_paths_seeded():
+    """Always-on seeded twin of the hypothesis property: an overloaded ToR
+    uplink a quarantines exactly the n_core paths (a, *) and nothing
+    else."""
+    topo = _three_tier_small()
+    rng = np.random.default_rng(11)
+    for _ in range(25):
+        T, A = topo.uplink_ids.shape
+        k = int(rng.integers(1, 4))
+        overloaded = {(int(rng.integers(0, T)), int(rng.integers(0, A)))
+                      for _ in range(k)}
+        _check_uplink_quarantine(topo, overloaded)
+
+
+def test_three_tier_uplink_quarantine_property():
+    pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    topo = _three_tier_small()
+    T, A = topo.uplink_ids.shape
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.sets(st.tuples(st.integers(0, T - 1), st.integers(0, A - 1)),
+                   min_size=1, max_size=5))
+    def run(overloaded):
+        _check_uplink_quarantine(topo, overloaded)
+
+    run()
+
+
+# --------------------------------------------------- dead-capacity reporting
+def test_path_utilization_reports_dead_capacity_not_idle():
+    """A downed spine (capacity 0) must read +inf utilization, not 0: the
+    offered load on it decays once DCQCN chokes the victims, and the old
+    max(cap, 1) floor made the one unusable path look like the idlest."""
+    topo = topology.leaf_spine(2, 4, 2, 40e9)
+    up = np.zeros((10, 2, 4), np.float32)  # no offered load anywhere
+    cap = np.asarray(topo.capacity).copy()
+    dead = 2
+    cap[0 * 4 + dead] = 0.0  # up[leaf0, spine2]
+    util = netfeed.path_utilization(topo, _FakeOuts(up), capacity=cap)
+    assert np.isinf(util[dead])
+    assert (util[[0, 1, 3]] == 0.0).all()
+    # and the overload rule alone now catches it (no dead-frac needed)
+    lh = LinkHealth(n_paths=4, phi_steps=4)
+    slow = netfeed.report_congestion(lh, topo, _FakeOuts(up), step=0,
+                                     capacity=cap, dead_capacity_frac=0.0)
+    assert dead in slow
+
+
 def test_cosim_round_trip_reroutes_around_killed_spine():
     """collective_trace under a killed-spine topology -> the fluid sim's
     per-path stats mark the path slow -> the next PathPlan avoids it."""
