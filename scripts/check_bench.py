@@ -68,6 +68,59 @@ def check_cosim(new: dict | None, base: dict | None) -> int:
     return 0 if ok else 1
 
 
+def check_faults(new: dict | None, base: dict | None,
+                 max_regress: float = 0.30) -> int:
+    """Chaos-campaign gate (BENCH_netsim.json["faults"]): every campaign
+    cell must survive (crashed_cells == 0 — the crash-proof pool salvaged
+    nothing), every scenario must still converge after its fault mix, and
+    the worst censored-p99 epoch may not regress more than ``max_regress``
+    vs the committed baseline (the sim is seeded/deterministic, so a drift
+    beyond noise is a behavior change, not jitter)."""
+    if not new or not new.get("rows"):
+        print("FAIL: new record has no faults rows (did --only faults run?)")
+        return 1
+    ok = True
+    crashed = new.get("crashed_cells", 0)
+    verdict = "OK" if crashed == 0 else "FAIL"
+    ok &= crashed == 0
+    print(f"{verdict}: crashed_cells {crashed} (salvaged campaign cells)")
+    base_rows = {}
+    for r in (base or {}).get("rows", []):
+        base_rows[(r["topo"], r["scheme"], r["ring"], r.get("seed", 0))] = r
+    if not base_rows:
+        print("WARN: baseline has no faults rows; gating convergence + "
+              "crashes only")
+    for r in new["rows"]:
+        key = (r.get("topo"), r.get("scheme"), r.get("ring"), r.get("seed", 0))
+        name = "/".join(str(k) for k in key)
+        if r.get("crashed"):
+            ok = False
+            print(f"FAIL: {name} crashed ({r.get('error', '?')[:80]})")
+            continue
+        conv = r.get("convergence_epochs")
+        if conv is None:
+            ok = False
+            print(f"FAIL: {name} never reconverges after the campaign")
+            continue
+        b = base_rows.get(key)
+        if b is not None and b.get("p99_worst_us"):
+            limit = b["p99_worst_us"] * (1.0 + max_regress)
+            p99 = r.get("p99_worst_us", float("inf"))
+            verdict = "OK" if p99 <= limit else "FAIL"
+            ok &= p99 <= limit
+            print(f"{verdict}: {name} worst censored p99 {p99:.1f}us "
+                  f"(baseline {b['p99_worst_us']:.1f}us, limit {limit:.1f}us)"
+                  f" conv_epochs {conv}")
+        else:
+            print(f"OK: {name} conv_epochs {conv} (no baseline row)")
+        rb = r.get("rebuilds_after_first")
+        if rb:
+            ok = False
+            print(f"FAIL: {name} rebuilt {rb} sweep executables after "
+                  f"epoch 0 (campaign operands must share one program)")
+    return 0 if ok else 1
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("new", help="fresh bench JSON (the run under test)")
@@ -79,6 +132,10 @@ def main() -> int:
     ap.add_argument("--cosim", action="store_true",
                     help="gate the cosim convergence rows instead of the "
                          "fig12 sweep")
+    ap.add_argument("--faults", action="store_true",
+                    help="gate the chaos-campaign rows (crashed cells, "
+                         "reconvergence, worst censored p99) instead of "
+                         "the fig12 sweep")
     args = ap.parse_args()
 
     if args.cosim:
@@ -87,6 +144,13 @@ def main() -> int:
         with open(args.baseline) as f:
             base_c = json.load(f).get("cosim")
         return check_cosim(new_c, base_c)
+
+    if args.faults:
+        with open(args.new) as f:
+            new_f = json.load(f).get("faults")
+        with open(args.baseline) as f:
+            base_f = json.load(f).get("faults")
+        return check_faults(new_f, base_f, max_regress=args.max_regress)
 
     with open(args.new) as f:
         new = json.load(f).get("fig12_sweep")

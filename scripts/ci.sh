@@ -46,3 +46,41 @@ if [ -z "${REPRO_CI_SKIP_BENCH_GATE:-}" ]; then
   python scripts/check_bench.py /tmp/BENCH_cosim.json BENCH_netsim.json \
     --cosim
 fi
+
+# chaos smoke on the forced 8-device platform: a seeded 3-fault random
+# campaign (flap / lossy / straggler mix) runs end to end through the
+# crash-proof pool — the driver must reconverge and salvage ZERO cells
+# (a JobFailure here means a worker crashed, the one thing the chaos
+# framework exists to make impossible).  The campaign spans the first 6
+# epochs; the run gets 2 clean trailing epochs so BOTH schemes can
+# reconverge (seqbalance sub-flows spray over every path, so it cannot
+# dodge a fault that persists to the final epoch).
+XLA_FLAGS="--xla_force_host_platform_device_count=8" python - <<'EOF'
+from repro.dist import cosim
+from repro.netsim import faults, sweep, topology
+
+topo = topology.leaf_spine(4, 4, 4, 100e9)
+camp = faults.random_campaign(topo, seed=11, epochs=6, n_faults=3, n_ranks=8)
+print("chaos smoke campaign:", *camp.summary(), sep="\n  ")
+hists = cosim.run_cosim_grid(
+    [dict(topo=topo, hosts=cosim.ring_hosts(topo, 8), size_bytes=4e6,
+          scheme=s, epochs=8, phi_steps=2, cooldown_steps=2, n_chunks=4,
+          seed=0, campaign=camp) for s in ("ecmp", "seqbalance")],
+    salvage=True, retries=1)
+crashed = [h for h in hists if h is None or getattr(h, "failed", False)]
+assert not crashed, f"chaos smoke: {len(crashed)} crashed cells: {crashed}"
+for h in hists:
+    conv = h.convergence_epoch(1)
+    assert conv is not None, f"{h.scheme}: no reconvergence after campaign"
+    print(f"chaos smoke: {h.scheme} reconverged at epoch {conv}, "
+          f"0 crashed cells")
+EOF
+
+# chaos-campaign gate: rerun the fast campaign bench and fail on crashed
+# (salvaged) cells, lost reconvergence, or a >30% worst censored-p99
+# regression vs the committed record.
+if [ -z "${REPRO_CI_SKIP_BENCH_GATE:-}" ]; then
+  python -m benchmarks.run --only faults --json /tmp/BENCH_faults.json
+  python scripts/check_bench.py /tmp/BENCH_faults.json BENCH_netsim.json \
+    --faults
+fi

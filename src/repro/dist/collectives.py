@@ -66,6 +66,76 @@ class PathPlan:
         return tuple(active[c % len(active)] for c in range(self.n_chunks))
 
 
+@dataclasses.dataclass(frozen=True)
+class PinnedPlan:
+    """A PathPlan whose chunk -> path table is EXPLICIT rather than derived
+    round-robin — the output of in-epoch replanning (``replan_chunk_paths``).
+    Duck-types ``PathPlan`` for everything that consumes plans
+    (``workloads.collective_trace``, the ring engine): same ``n_chunks`` /
+    ``directions`` / ``inactive`` / ``wire_dtype`` fields, but
+    ``chunk_paths()`` returns the pinned table verbatim."""
+
+    n_chunks: int
+    directions: tuple[int, ...]
+    inactive: tuple[bool, ...]
+    paths: tuple[int, ...]  # chunk c -> path paths[c]
+    wire_dtype: str = "float32"
+
+    def __post_init__(self):
+        assert len(self.paths) == self.n_chunks, (self.paths, self.n_chunks)
+        assert len(self.inactive) == len(self.directions)
+        assert all(0 <= p < len(self.directions) for p in self.paths)
+
+    @property
+    def n_paths(self) -> int:
+        return len(self.directions)
+
+    def chunk_paths(self) -> tuple[int, ...]:
+        return tuple(self.paths)
+
+
+def replan_chunk_paths(paths: tuple[int, ...], directions: tuple[int, ...],
+                       inactive: tuple[bool, ...],
+                       in_flight: tuple[int, ...] = ()) -> tuple[int, ...]:
+    """Mid-collective replan: move chunks off newly-quarantined paths onto
+    surviving ones WITHOUT ever reordering a chunk.
+
+    The no-reordering rule, per chunk:
+
+      * a chunk in ``in_flight`` keeps its path unconditionally — its
+        packets are already interleaved on the wire, and a migration would
+        race them (exactly the per-sub-flow rule of the paper's Shaper);
+      * a migrating chunk may only move to a path with the SAME ring
+        direction — flipping direction renumbers every segment the chunk
+        has already reduced, which is a reorder of its own stream;
+      * if no same-direction path survives, the chunk STAYS on its
+        quarantined path (graceful degradation: a slow path delivers late
+        but in order; a direction flip delivers wrong).
+
+    Surviving chunks on healthy paths are untouched.  Migrants spread
+    round-robin over the same-direction survivors."""
+    assert len(directions) == len(inactive)
+    in_flight_set = set(in_flight)
+    survivors: dict[int, list[int]] = {}
+    for p, d in enumerate(directions):
+        if not inactive[p]:
+            survivors.setdefault(d, []).append(p)
+    out: list[int] = []
+    rr: dict[int, int] = {}
+    for c, p in enumerate(paths):
+        if c in in_flight_set or not inactive[p]:
+            out.append(p)
+            continue
+        same_dir = survivors.get(directions[p], [])
+        if not same_dir:
+            out.append(p)  # degraded: in-order on a slow path beats a flip
+            continue
+        k = rr.get(directions[p], 0)
+        out.append(same_dir[k % len(same_dir)])
+        rr[directions[p]] = k + 1
+    return tuple(out)
+
+
 # ------------------------------------------------------------- wire dtypes
 def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
     """Absmax int8 quantization: returns (q int8, scale f32 scalar) with

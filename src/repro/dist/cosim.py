@@ -54,6 +54,17 @@ class FaultEvent:
     scale: float = 0.0
     end_epoch: int | None = None
 
+    def __post_init__(self):
+        # an empty-links or end<=start event is always a typo'd schedule:
+        # it silently applies to nothing / never, and the bench reads the
+        # run as a (vacuously) healthy fault epoch
+        assert len(self.links) > 0, "FaultEvent with no links is a no-op"
+        assert self.start_epoch >= 0, self.start_epoch
+        assert self.scale >= 0.0, self.scale
+        if self.end_epoch is not None:
+            assert self.end_epoch > self.start_epoch, \
+                (self.start_epoch, self.end_epoch)
+
     def active(self, epoch: int) -> bool:
         return self.start_epoch <= epoch and (
             self.end_epoch is None or epoch < self.end_epoch)
@@ -117,6 +128,10 @@ class EpochRecord:
     new_builds: int  # sweep executables built this epoch (0 after epoch 0)
     fct: np.ndarray  # censored per-flow samples (CDFs)
     imbalance: np.ndarray  # per-(ToR, window) imbalance samples
+    # --- chaos-campaign observables (defaults keep legacy callers intact)
+    replan_round: int = -1  # in-epoch replanning cut round (-1 = none)
+    straggler_scale: float = 1.0  # cadence stretch the ring actually paid
+    straggler_quarantined: tuple[int, ...] = ()  # ranks the policy benched
 
 
 @dataclasses.dataclass
@@ -187,6 +202,9 @@ class CosimHistory:
             n_quarantined=[len(r.quarantined) for r in rs],
             spill_steps=[r.spill_steps for r in rs],
             new_builds=[r.new_builds for r in rs],
+            replan_round=[r.replan_round for r in rs],
+            straggler_scale=[round(r.straggler_scale, 3) for r in rs],
+            n_straggler_quarantined=[len(r.straggler_quarantined) for r in rs],
         )
 
     def summary_lines(self) -> list[str]:
@@ -198,6 +216,63 @@ class CosimHistory:
         ]
 
 
+# ----------------------------------------------------------- epoch journal
+def _rec_to_json(r: EpochRecord) -> dict:
+    d = dataclasses.asdict(r)
+    d["fct"] = np.asarray(r.fct, np.float32).tolist()
+    d["imbalance"] = np.asarray(r.imbalance, np.float32).tolist()
+    for k in ("quarantined", "reported_slow", "straggler_quarantined"):
+        d[k] = list(d[k])
+    return d
+
+
+def _rec_from_json(d: dict) -> EpochRecord:
+    d = dict(d)
+    d["fct"] = np.asarray(d["fct"], np.float32)
+    d["imbalance"] = np.asarray(d["imbalance"], np.float32)
+    for k in ("quarantined", "reported_slow", "straggler_quarantined"):
+        d[k] = tuple(d.get(k, ()))
+    return EpochRecord(**d)
+
+
+def _load_journal(journal: str, spec_key: dict):
+    """Parse a campaign journal.  Returns (records, epoch_states) for a
+    journal whose header matches ``spec_key``; None for a missing,
+    mismatched (different campaign — restart, don't splice), or corrupt
+    file.  ``epoch_states`` are the per-epoch (plan_inactive, health,
+    straggler) snapshots; the LAST one is the exact driver state to resume
+    from."""
+    import json
+    import os
+
+    if not os.path.exists(journal):
+        return None
+    try:
+        with open(journal) as fh:
+            raw = [ln for ln in fh if ln.strip()]
+    except OSError:
+        return None
+    if not raw:
+        return None
+    try:
+        head = json.loads(raw[0])
+    except ValueError:
+        return None
+    if not isinstance(head, dict) or head.get("journal") != "cosim" \
+            or head.get("spec") != spec_key:
+        return None
+    records, states = [], []
+    for ln in raw[1:]:
+        # a torn tail line IS the interruption artifact: keep the prefix
+        try:
+            d = json.loads(ln)
+            records.append(_rec_from_json(d["record"]))
+            states.append(d)
+        except (ValueError, KeyError, TypeError):
+            break
+    return records, states
+
+
 # ------------------------------------------------------------------ driver
 def run_cosim(
     topo,
@@ -207,17 +282,24 @@ def run_cosim(
     scheme: str = "ecmp",
     epochs: int = 8,
     faults: tuple = (),
+    campaign=None,
     phi_steps: int = 2,
+    cooldown_steps: int = 0,
     n_chunks: int = 8,
     wire_dtype: str = "float32",
     dt: float = 10e-6,
     duration_s: float | None = None,
     overload: float = 1.5,
     steer: bool = True,
+    replan: bool = True,
+    detect_delay_s: float | None = None,
     health: LinkHealth | None = None,
+    straggler_policy=None,
+    straggler_deadline_frac: float = 1.5,
     seed: int = 0,
     window_slots: int | None = None,
     imbalance_sample_every: int = 10,
+    journal: str | None = None,
     **cfg_kw,
 ) -> CosimHistory:
     """Run ``epochs`` plan -> sim -> health cycles over a fault schedule.
@@ -231,17 +313,49 @@ def run_cosim(
     ``window_slots`` defaults to one slot per flow, which makes spill
     impossible (a fault epoch can hold every flow in flight at once) and
     therefore keeps the compiled program's shapes pinned.
+
+    Chaos-campaign extensions (all no-ops when unused):
+
+      * ``campaign`` (``netsim.faults.FaultCampaign``) compiles per epoch
+        into a WALL-CLOCK capacity schedule f32[K, n_links + 1] + a loss
+        vector, threaded through the sweep as traced operands — flaps and
+        PFC pauses land mid-horizon, lossy links drive go-back-N goodput
+        amplification inside the dataplane, and every epoch still reuses
+        the one compiled program (K is campaign-constant).  Epoch-level
+        ``faults`` compose on top.
+      * in-epoch replanning (``replan=True``, needs ``steer``): a campaign
+        flap with an intra-epoch onset is DETECTED ``detect_delay_s``
+        (default: two ring rounds) after it lands; rounds before the cut
+        run the original plan, rounds after run a
+        ``collectives.replan_chunk_paths`` pinned plan — in-flight rounds
+        keep their QP flow ids, surviving steered QPs keep theirs, only
+        QPs whose fabric path died re-steer (the no-reordering rule).
+        When every active path died, chunks/QPs fall back to the primary
+        path rather than stalling.
+      * stragglers: campaign ``Straggler`` events stretch their rank's
+        step duration; ``straggler_policy`` (auto-created when the
+        campaign has stragglers) observes every rank per epoch, and ranks
+        it quarantines stop gating the bulk-synchronous cadence — the
+        ring's effective round gap is the slowest NON-quarantined rank.
+      * ``cooldown_steps`` enables LinkHealth's flap hysteresis (re-report
+        within the cooldown doubles the path's phi window).
+      * ``journal`` (a file path) appends one JSON line per completed
+        epoch; re-running with the same spec resumes after the last
+        journaled epoch instead of restarting the campaign (exact driver
+        state — records, health phi windows, straggler misses — restores
+        from the journal tail; a spec mismatch restarts from scratch).
     """
+    from repro.dist import collectives
     from repro.netsim import metrics, sweep, workloads
     from repro.netsim.engine import SimConfig
 
     hosts = list(hosts)
     n = len(hosts)
     if health is None:
-        health = LinkHealth(n_paths=topo.n_paths, phi_steps=phi_steps)
+        health = LinkHealth(n_paths=topo.n_paths, phi_steps=phi_steps,
+                            cooldown_steps=cooldown_steps)
     else:
         phi_steps = health.phi_steps
-    plan = health.plan(0, n_chunks=n_chunks, wire_dtype=wire_dtype)
 
     cap0 = np.asarray(topo.capacity)
     fabric_bw = float(np.median(cap0[np.asarray(topo.uplink_ids)]))
@@ -256,60 +370,211 @@ def run_cosim(
     duration_s = n_steps * dt
     cfg = SimConfig(scheme=scheme, duration_s=duration_s, dt=dt, **cfg_kw)
 
-    W = window_slots
+    policy = straggler_policy
+    if policy is None and campaign is not None and campaign.has_stragglers():
+        from repro.dist.elastic import StragglerPolicy
+
+        policy = StragglerPolicy(deadline_s=gap * straggler_deadline_frac,
+                                 max_misses=2)
+
+    # ---------------- journal: resume a previously interrupted campaign
+    start_epoch = 0
     records: list[EpochRecord] = []
     plans: list = []
-    for epoch in range(epochs):
-        cap = capacity_at(topo, faults, epoch)
-        trace = workloads.collective_trace(
-            plan, hosts, size_bytes, link_bw=fabric_bw, round_gap_s=gap,
-            seed=seed, steer_paths=topo.n_paths if steer else None)
-        if W is None:
-            W = int(trace.valid.sum())  # spill-proof: one slot per flow
-        b0 = sweep.cache_stats()["builds"]
-        result, outs = sweep.run_one(topo, cfg, trace, capacity=cap,
-                                     window_slots=W)
-        new_builds = sweep.cache_stats()["builds"] - b0
-        slow = netfeed.report_congestion(health, topo, outs, step=epoch,
-                                         overload=overload, capacity=cap)
-        next_plan = health.plan(epoch + 1, n_chunks=n_chunks,
-                                wire_dtype=wire_dtype)
-        churn = sum(int(a != b)
-                    for a, b in zip(plan.inactive, next_plan.inactive))
-        fct, completion = metrics.fct_samples(result, trace,
-                                              horizon_s=duration_s)
-        imb = metrics.throughput_imbalance(
-            outs, sample_every=imbalance_sample_every,
-            trace_stride=cfg.uplink_sample_every)
-        records.append(EpochRecord(
-            epoch=epoch,
-            fct_p50_s=float(np.percentile(fct, 50)),
-            fct_p99_s=float(np.percentile(fct, 99)),
-            fct_mean_s=float(fct.mean()),
-            completion=completion,
-            imbalance_mean=float(imb.mean()) if imb.size else 0.0,
-            plan_churn=churn,
-            quarantined=tuple(p for p, d in enumerate(plan.inactive) if d),
-            reported_slow=tuple(slow),
-            spill_steps=int(result.spill_steps),
-            new_builds=new_builds,
-            fct=fct,
-            imbalance=imb,
-        ))
-        plans.append(plan)
-        plan = next_plan
+    spec_key = dict(
+        scheme=scheme, epochs=epochs, hosts=[int(h) for h in hosts],
+        size_bytes=float(size_bytes), phi_steps=phi_steps,
+        cooldown_steps=cooldown_steps, n_chunks=n_chunks, seed=seed,
+        steer=bool(steer), replan=bool(replan),
+        topo=dict(kind=topo.kind, n_links=topo.n_links, n_paths=topo.n_paths),
+    )
+    journal_fh = None
+    if journal is not None:
+        import json
+
+        loaded = _load_journal(journal, spec_key)
+        if loaded is not None:
+            records, states = loaded
+            start_epoch = len(records)
+            if states:
+                health.restore(states[-1]["health"])
+                if policy is not None and states[-1].get("straggler"):
+                    policy.restore(states[-1]["straggler"])
+            for st in states:
+                plans.append(collectives.PathPlan(
+                    n_chunks=n_chunks, directions=tuple(health.directions),
+                    inactive=tuple(bool(b) for b in st["plan_inactive"]),
+                    wire_dtype=wire_dtype))
+        # (re)write header + the valid prefix: drops any torn tail line
+        # left by the interruption so the resumed journal stays parseable
+        journal_fh = open(journal, "w")
+        journal_fh.write(json.dumps(
+            dict(journal="cosim", version=1, spec=spec_key)) + "\n")
+        for st in (loaded[1] if loaded is not None else ()):
+            journal_fh.write(json.dumps(st) + "\n")
+        journal_fh.flush()
+
+    plan = health.plan(start_epoch, n_chunks=n_chunks, wire_dtype=wire_dtype)
+    W = window_slots
+    try:
+        for epoch in range(start_epoch, epochs):
+            # -------------------------------------------- fault state
+            if campaign is not None:
+                cap = campaign.capacity_schedule(topo, epoch)  # [K, nl+1]
+                for ev in faults:  # epoch-level faults compose on top
+                    if ev.active(epoch):
+                        cap[:, list(ev.links)] *= np.float32(ev.scale)
+                cap_seg = campaign.seg_steps(n_steps)
+                loss = campaign.loss_at(topo, epoch)
+                # congestion reporting sees the epoch's WORST capacity: a
+                # link that flapped at all this epoch reads as degraded
+                cap_report = cap.min(axis=0)
+                slowdowns = campaign.straggler_slowdowns(epoch)
+            else:
+                cap = capacity_at(topo, faults, epoch)
+                cap_seg, loss, cap_report = 0, None, cap
+                slowdowns = {}
+
+            # -------------------------------------------- stragglers
+            strag_quar: tuple[int, ...] = ()
+            if policy is not None:
+                for i in range(n):
+                    policy.observe(i, gap * slowdowns.get(i, 1.0))
+                strag_quar = policy.quarantined()
+            eff = max([slowdowns.get(i, 1.0) for i in range(n)
+                       if i not in strag_quar] or [1.0])
+            gap_e = gap * eff  # slowest non-quarantined rank gates the ring
+
+            # ------------------------------- trace (+ in-epoch replanning)
+            steer_p = topo.n_paths if steer else None
+            onset = campaign.midepoch_onset(topo, epoch) if campaign else None
+            replan_round = -1
+            if onset is not None and replan and steer and onset.paths:
+                t_detect = onset.frac * duration_s + (
+                    detect_delay_s if detect_delay_s is not None else 2 * gap_e)
+                r_cut = int(math.ceil(t_detect / gap_e))
+                if 0 < r_cut < rounds:
+                    replan_round = r_cut
+            if replan_round > 0:
+                # the fault is observed mid-collective: report it NOW so
+                # both this epoch's tail and the next plan route around it
+                for p in onset.paths:
+                    health.report_slow(p, epoch)
+                inact2 = tuple(d or (p in set(onset.paths))
+                               for p, d in enumerate(plan.inactive))
+                pinned = collectives.PinnedPlan(
+                    n_chunks=n_chunks, directions=tuple(plan.directions),
+                    inactive=inact2,
+                    paths=collectives.replan_chunk_paths(
+                        plan.chunk_paths(), tuple(plan.directions), inact2),
+                    wire_dtype=wire_dtype)
+                # steering targets: surviving QPs keep their fid (their
+                # stream stays on its path — no reorder); only QPs whose
+                # fabric path died re-steer, round-robin over survivors,
+                # falling back to the primary path when none survive
+                active0 = [p for p, d in enumerate(plan.inactive)
+                           if not d] or [0]
+                tgt = np.array(
+                    [[active0[(i * n_chunks + c) % len(active0)]
+                      for i in range(n)] for c in range(n_chunks)], np.int32)
+                dead = set(onset.paths)
+                surv = [p for p in active0 if p not in dead] or [0]
+                tgt_b, k = tgt.copy(), 0
+                for c in range(n_chunks):
+                    for i in range(n):
+                        if int(tgt[c, i]) in dead:
+                            tgt_b[c, i] = surv[k % len(surv)]
+                            k += 1
+                tr_a = workloads.collective_trace(
+                    plan, hosts, size_bytes, link_bw=fabric_bw,
+                    round_gap_s=gap_e, rounds=replan_round, seed=seed,
+                    steer_paths=steer_p, steer_targets=tgt)
+                tr_b = workloads.collective_trace(
+                    pinned, hosts, size_bytes, link_bw=fabric_bw,
+                    round_gap_s=gap_e, rounds=rounds - replan_round,
+                    start_s=replan_round * gap_e, seed=seed,
+                    steer_paths=steer_p, steer_targets=tgt_b)
+                trace = workloads.merge_traces(tr_a, tr_b)
+            else:
+                trace = workloads.collective_trace(
+                    plan, hosts, size_bytes, link_bw=fabric_bw,
+                    round_gap_s=gap_e, seed=seed, steer_paths=steer_p)
+            if W is None:
+                W = int(trace.valid.sum())  # spill-proof: one slot per flow
+
+            # -------------------------------------------------- simulate
+            b0 = sweep.cache_stats()["builds"]
+            result, outs = sweep.run_one(topo, cfg, trace, capacity=cap,
+                                         loss=loss, cap_seg_steps=cap_seg,
+                                         window_slots=W)
+            new_builds = sweep.cache_stats()["builds"] - b0
+            slow = netfeed.report_congestion(
+                health, topo, outs, step=epoch, overload=overload,
+                capacity=cap_report, loss=loss)
+            next_plan = health.plan(epoch + 1, n_chunks=n_chunks,
+                                    wire_dtype=wire_dtype)
+            churn = sum(int(a != b)
+                        for a, b in zip(plan.inactive, next_plan.inactive))
+            fct, completion = metrics.fct_samples(result, trace,
+                                                  horizon_s=duration_s)
+            imb = metrics.throughput_imbalance(
+                outs, sample_every=imbalance_sample_every,
+                trace_stride=cfg.uplink_sample_every)
+            rec = EpochRecord(
+                epoch=epoch,
+                fct_p50_s=float(np.percentile(fct, 50)),
+                fct_p99_s=float(np.percentile(fct, 99)),
+                fct_mean_s=float(fct.mean()),
+                completion=completion,
+                imbalance_mean=float(imb.mean()) if imb.size else 0.0,
+                plan_churn=churn,
+                quarantined=tuple(p for p, d in enumerate(plan.inactive) if d),
+                reported_slow=tuple(slow),
+                spill_steps=int(result.spill_steps),
+                new_builds=new_builds,
+                fct=fct,
+                imbalance=imb,
+                replan_round=replan_round,
+                straggler_scale=float(eff),
+                straggler_quarantined=strag_quar,
+            )
+            records.append(rec)
+            plans.append(plan)
+            if journal_fh is not None:
+                import json
+
+                journal_fh.write(json.dumps(dict(
+                    epoch=epoch,
+                    record=_rec_to_json(rec),
+                    plan_inactive=[bool(b) for b in plan.inactive],
+                    health=health.state(),
+                    straggler=policy.state() if policy is not None else None,
+                )) + "\n")
+                journal_fh.flush()
+            plan = next_plan
+    finally:
+        if journal_fh is not None:
+            journal_fh.close()
     return CosimHistory(scheme=scheme, phi_steps=phi_steps,
                         duration_s=duration_s, records=records, plans=plans,
                         final_plan=plan, health=health)
 
 
-def run_cosim_grid(specs: list[dict], *, workers: int | None = None
-                   ) -> list[CosimHistory]:
+def run_cosim_grid(specs: list[dict], *, workers: int | None = None,
+                   salvage: bool = False, timeout_s: float | None = None,
+                   retries: int = 0) -> list:
     """Fan a (scheme x ring size x fault schedule x seed) grid through the
     sweep runner's job pool: one ``run_cosim`` epoch loop per spec dict,
     dispatched by ``netsim.sweep.run_jobs`` (callable-job spelling), so
     grid points share the executable cache and the sharded dispatch path.
     Histories return in spec order.
+
+    ``salvage`` / ``timeout_s`` / ``retries`` pass straight to
+    ``sweep.run_jobs``: with ``salvage=True`` a chaos campaign that crashes
+    or times out one grid cell yields a ``sweep.JobFailure`` poisoned
+    record AT that cell's index (check ``getattr(h, "failed", False)``)
+    instead of burning every completed sibling — exactly the crash-proof
+    contract a 320-host fault sweep needs.
 
     Note: ``EpochRecord.new_builds`` attribution is per-process, so the
     no-recompile acceptance check should read a grid of ONE spec (or
@@ -318,4 +583,6 @@ def run_cosim_grid(specs: list[dict], *, workers: int | None = None
     from repro.netsim import sweep
 
     return sweep.run_jobs([functools.partial(run_cosim, **spec)
-                           for spec in specs], workers=workers)
+                           for spec in specs], workers=workers,
+                          salvage=salvage, timeout_s=timeout_s,
+                          retries=retries)

@@ -29,39 +29,84 @@ class LinkHealth:
 
     A path is inactive at ``step`` iff a slowness report arrived strictly
     fewer than ``phi_steps`` steps ago; each new report extends the window.
-    """
+
+    Hysteresis (``cooldown_steps > 0``): a path that gets RE-reported
+    within ``cooldown_steps`` of its window expiring is flapping —
+    released, immediately slow again, re-quarantined, every cycle churning
+    the plan.  Instead of re-entering at the base window, its effective phi
+    DOUBLES (capped at ``max_phi_steps`` when > 0), so a flapper earns an
+    exponentially longer quarantine while a genuinely recovered path (next
+    report well after the cooldown) resets to the base ``phi_steps``.  The
+    default ``cooldown_steps=0`` is bit-exact legacy behavior — the co-sim
+    release-epoch contract (``expiry == last_report + phi_steps``) keys on
+    it."""
 
     n_paths: int
     phi_steps: int = 16
     directions: tuple[int, ...] | None = None
+    cooldown_steps: int = 0
+    max_phi_steps: int = 0  # 0 = uncapped
 
     def __post_init__(self):
         assert self.n_paths >= 1 and self.phi_steps >= 1
+        assert self.cooldown_steps >= 0 and self.max_phi_steps >= 0
+        # a cap below the base window would let hysteresis SHORTEN
+        # quarantines — the opposite of its contract
+        assert self.max_phi_steps == 0 or self.max_phi_steps >= self.phi_steps
         if self.directions is None:
             self.directions = alternating_directions(self.n_paths)
         assert len(self.directions) == self.n_paths
         self._last_report: dict[int, int] = {}
+        self._phi: dict[int, int] = {}  # per-path effective phi (hysteresis)
+
+    def phi_of(self, path: int) -> int:
+        """Effective phi window for ``path`` (== ``phi_steps`` unless
+        hysteresis has extended it)."""
+        return self._phi.get(path, self.phi_steps)
 
     def report_slow(self, path: int, step: int) -> None:
         assert 0 <= path < self.n_paths, path
         prev = self._last_report.get(path)
+        if prev is not None and self.cooldown_steps > 0:
+            prev_expiry = prev + self.phi_of(path)
+            if prev_expiry <= step < prev_expiry + self.cooldown_steps:
+                # released and slow again within the cooldown: a flapper —
+                # double its window instead of churning the plan each cycle
+                new_phi = self.phi_of(path) * 2
+                if self.max_phi_steps > 0:
+                    new_phi = min(new_phi, self.max_phi_steps)
+                self._phi[path] = new_phi
+            elif step >= prev_expiry + self.cooldown_steps:
+                self._phi[path] = self.phi_steps  # clean recovery: reset
         self._last_report[path] = step if prev is None else max(prev, step)
 
     def inactive(self, step: int) -> tuple[bool, ...]:
         return tuple(
             self._last_report.get(p) is not None
-            and step < self._last_report[p] + self.phi_steps
+            and step < self._last_report[p] + self.phi_of(p)
             for p in range(self.n_paths)
         )
 
     def expiry(self, path: int) -> int | None:
         """First step at which ``path`` re-enters ``plan()`` — exactly
-        ``phi_steps`` after its last report (each report refreshes the
+        its effective phi after its last report (each report refreshes the
         window).  None if the path was never reported.  The co-sim driver
         and the phi-expiry regression tests read this to assert quarantine
         release happens on the predicted epoch, not merely eventually."""
         last = self._last_report.get(path)
-        return None if last is None else last + self.phi_steps
+        return None if last is None else last + self.phi_of(path)
+
+    def state(self) -> dict:
+        """JSON-able snapshot for campaign journaling (``dist.cosim``)."""
+        return dict(
+            last_report={str(k): v for k, v in self._last_report.items()},
+            phi={str(k): v for k, v in self._phi.items()},
+        )
+
+    def restore(self, state: dict) -> None:
+        self._last_report = {int(k): int(v)
+                             for k, v in state.get("last_report", {}).items()}
+        self._phi = {int(k): int(v) for k, v in state.get("phi", {}).items()}
 
     def plan(self, step: int, n_chunks: int = 4,
              wire_dtype: str = "float32") -> collectives.PathPlan:
@@ -107,7 +152,12 @@ def remesh_plan(mesh_shape: tuple[int, ...], failed_pods: tuple[int, ...],
 @dataclasses.dataclass
 class StragglerPolicy:
     """Deadline-based straggler watchdog: ``max_misses`` consecutive
-    over-deadline steps quarantine the rank; one on-time step recovers it."""
+    over-deadline steps quarantine the rank; one on-time step recovers it.
+
+    The co-sim driver (``dist.cosim``) feeds it per-rank step durations
+    each epoch; the persistent ``quarantined()`` set tells the bulk-
+    synchronous cadence which ranks to stop waiting for (a quarantined
+    straggler no longer stretches everyone's step time)."""
 
     deadline_s: float
     max_misses: int = 3
@@ -115,11 +165,34 @@ class StragglerPolicy:
     def __post_init__(self):
         assert self.deadline_s > 0 and self.max_misses >= 1
         self._misses: dict[int, int] = {}
+        self._quarantined: set[int] = set()
 
     def observe(self, rank: int, step_duration_s: float) -> str:
         if step_duration_s <= self.deadline_s:
             self._misses[rank] = 0
+            self._quarantined.discard(rank)  # one on-time step recovers
             return "ok"
         misses = self._misses.get(rank, 0) + 1
         self._misses[rank] = misses
-        return "quarantine" if misses >= self.max_misses else "warn"
+        if misses >= self.max_misses:
+            self._quarantined.add(rank)
+            return "quarantine"
+        return "warn"
+
+    def misses(self, rank: int) -> int:
+        return self._misses.get(rank, 0)
+
+    def quarantined(self) -> tuple[int, ...]:
+        return tuple(sorted(self._quarantined))
+
+    def state(self) -> dict:
+        """JSON-able snapshot for campaign journaling (``dist.cosim``)."""
+        return dict(
+            misses={str(k): v for k, v in self._misses.items()},
+            quarantined=sorted(self._quarantined),
+        )
+
+    def restore(self, state: dict) -> None:
+        self._misses = {int(k): int(v)
+                        for k, v in state.get("misses", {}).items()}
+        self._quarantined = {int(r) for r in state.get("quarantined", [])}

@@ -62,7 +62,9 @@ def _paths_for_uplink(topo, uplink: int) -> tuple[int, ...]:
 def report_congestion(health: LinkHealth, topo, outs, *, step: int = 0,
                       leaf: int | None = None, overload: float = 1.5,
                       dead_capacity_frac: float = 0.01,
-                      capacity: np.ndarray | None = None) -> tuple[int, ...]:
+                      capacity: np.ndarray | None = None,
+                      loss: np.ndarray | None = None,
+                      loss_threshold: float = 1e-3) -> tuple[int, ...]:
     """Feed one simulation's per-path stats into ``health``.
 
     A path is reported slow when its uplink's time-mean offered load
@@ -70,10 +72,16 @@ def report_congestion(health: LinkHealth, topo, outs, *, step: int = 0,
     through the whole trace), or when the uplink's capacity itself is below
     ``dead_capacity_frac`` of the leaf-median (a failed/downed spine —
     offered load on a dead link may legitimately decay to zero once DCQCN
-    chokes the victims, but the path is still unusable).
+    chokes the victims, but the path is still unusable), or — with a
+    ``loss`` vector (faults.LossyLink) — when any link on the path drops
+    more than ``loss_threshold`` of packets: a lossy path murders goodput
+    through go-back-N long before its utilization looks congested, the
+    signal a deployment reads from retransmission counters.
     ``capacity`` overrides ``topo.capacity`` (the co-sim driver's per-epoch
-    fault state).  Returns the quarantined path ids.
-    """
+    fault state).  Returns the quarantined path ids (deduped, in report
+    order)."""
+    from repro.netsim.topology import paths_for_link
+
     assert health.n_paths == topo.n_paths, (health.n_paths, topo.n_paths)
     util = path_utilization(topo, outs, leaf=leaf, capacity=capacity)
     cap_vec = np.asarray(topo.capacity if capacity is None else capacity)
@@ -86,7 +94,13 @@ def report_congestion(health: LinkHealth, topo, outs, *, step: int = 0,
             for p in _paths_for_uplink(topo, u):
                 health.report_slow(p, step)
                 slow.append(p)
-    return tuple(slow)
+    if loss is not None:
+        lv = np.asarray(loss)
+        for link in np.nonzero(lv[:topo.n_links] > loss_threshold)[0]:
+            for p in paths_for_link(topo, int(link)):
+                health.report_slow(p, step)
+                slow.append(p)
+    return tuple(dict.fromkeys(slow))
 
 
 @dataclasses.dataclass

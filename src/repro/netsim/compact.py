@@ -163,10 +163,15 @@ def init_compact_state(
     built OUTSIDE the jitted run and donated — it is the one state buffer
     large enough to matter, and it aliases the finish output exactly.
     ``capacity`` optionally overrides ``topo.capacity`` as a TRACED operand
-    (co-sim fault schedules; see ``run_core``)."""
+    (co-sim fault schedules; see ``run_core``) — either f32[n_links + 1] or
+    a wall-clock schedule f32[K, n_links + 1] (row 0 seeds the DCQCN line
+    rate)."""
     N = cfg.n_sub
-    line_rate = line_rate_of(topo) if capacity is None \
-        else capacity[topo.n_links - 2 * topo.n_hosts]
+    if capacity is None:
+        line_rate = line_rate_of(topo)
+    else:
+        cap0 = capacity[0] if capacity.ndim == 2 else capacity
+        line_rate = cap0[topo.n_links - 2 * topo.n_hosts]
     if finish0 is None:
         finish0 = jnp.full((F_pad,), jnp.inf, jnp.float32)
     hf = topo.n_fabric_hops
@@ -201,7 +206,9 @@ def init_compact_state(
 
 def build_compact_sim(topo: Topology, cfg: SimConfig, trace_arrays, W: int, F_pad: int,
                       A: int = 256, gate_admission: bool = False,
-                      capacity: jax.Array | None = None):
+                      capacity: jax.Array | None = None,
+                      loss: jax.Array | None = None,
+                      cap_seg_steps: int = 0):
     """trace_arrays = (sizes, arrivals, src, dst, fid, valid), SORTED by
     arrival (invalid flows last, arrival=+inf), padded to F_pad.
     ``A`` is the admission lane width: at most A flows admit per step, and
@@ -216,8 +223,17 @@ def build_compact_sim(topo: Topology, cfg: SimConfig, trace_arrays, W: int, F_pa
     ``topo.capacity`` as a TRACED operand: co-sim fault schedules mutate
     link capacities every planning epoch, and a traced capacity lets all
     epochs share ONE compiled program instead of recompiling per fault
-    state.  ``None`` keeps the topology's capacity baked in as a constant
-    (bit-identical to the pre-traced-capacity programs).
+    state.  A 2-D schedule f32[K, n_links + 1] extends that to WALL-CLOCK
+    granularity (faults.FaultCampaign): the step loop reads row
+    ``min(step // cap_seg_steps, K - 1)``, so link flaps / PFC pauses land
+    mid-horizon while K and ``cap_seg_steps`` stay static — shapes fixed,
+    still one compiled program for the whole campaign.  ``None`` keeps the
+    topology's capacity baked in as a constant (bit-identical to the
+    pre-traced-capacity programs).
+    ``loss`` (f32[n_links + 1], traced) is the per-link packet-loss vector
+    (faults.LossyLink): delivered throughput deflates by the go-back-N
+    goodput factor along each sub-flow's hops while offered load stays at
+    the DCQCN rate — retransmissions ride the wire (paper Table 1).
     Returns (init_state, step_fn, phases) — ``phases`` maps the profile
     phase names (admit / cascade / dcqcn / finish) to the closures
     ``step_fn`` composes, for benchmarks/run.py --profile."""
@@ -227,13 +243,35 @@ def build_compact_sim(topo: Topology, cfg: SimConfig, trace_arrays, W: int, F_pa
     nl = topo.n_links
 
     fc = flow_constants(topo, cfg, sizes, src, dst, fid)
-    cap_vec = topo.capacity if capacity is None else jnp.asarray(capacity)
-    line_rate = cap_vec[nl - 2 * topo.n_hosts]  # host_tx[0] bw
+    if capacity is None:
+        cap0 = topo.capacity
+
+        def cap_of(step):
+            return topo.capacity
+    else:
+        cap_arr = jnp.asarray(capacity)
+        if cap_arr.ndim == 2:
+            cap0 = cap_arr[0]
+            seg = max(int(cap_seg_steps), 1)
+            Kseg = cap_arr.shape[0]
+
+            def cap_of(step):
+                return cap_arr[jnp.minimum(step // seg, Kseg - 1)]
+        else:
+            cap0 = cap_arr
+
+            def cap_of(step):
+                return cap_arr
+    loss_vec = None if loss is None else jnp.asarray(loss)
+    line_rate = cap0[nl - 2 * topo.n_hosts]  # host_tx[0] bw
     qmask = dataplane.queue_mask_for(topo)
     dparams = cfg.dcqcn
 
     if cfg.scheme in ("conga", "drill"):
         assert topo.kind == "leaf_spine", f"{cfg.scheme} is 2-tier only (paper §IV.B)"
+    if loss_vec is not None:
+        assert cfg.scheme != "drill", \
+            "lossy links + DRILL spray unsupported (spray has no pinned hops)"
 
     def init_state() -> CompactState:
         return init_compact_state(topo, cfg, W, F_pad, capacity=capacity)
@@ -375,13 +413,14 @@ def build_compact_sim(topo: Topology, cfg: SimConfig, trace_arrays, W: int, F_pa
             active, jnp.minimum(state.cc.rc, state.remaining * 8.0 / cfg.dt), 0.0
         )  # [W, N]
         ca = state.cache
+        capv = cap_of(state.step)  # wall-clock schedule row (or the vector)
         if cfg.scheme == "drill":
             arrival, thr, w_spray, pq = dataplane.drill_spray(
                 topo, state.queue, rc[:, 0], ca.src, ca.dst, ca.sleaf, ca.dleaf,
-                active[:, 0:1], cfg.drill_q0, capacity=cap_vec,
+                active[:, 0:1], cfg.drill_q0, capacity=capv,
             )
             new_queue, p_mark = dataplane.integrate_queue(
-                state.queue, arrival, cap_vec, qmask, dparams,
+                state.queue, arrival, capv, qmask, dparams,
                 dt=cfg.dt, qmax_bytes=cfg.qmax_bytes, n_links=nl,
             )
             p_sub, p_sub_fabric = dataplane.drill_mark_probs(
@@ -390,7 +429,7 @@ def build_compact_sim(topo: Topology, cfg: SimConfig, trace_arrays, W: int, F_pa
             thr = thr * dataplane.drill_gbn_factor(
                 topo, pq, w_spray, rc[:, 0], mtu_bytes=dparams.mtu_bytes,
                 jitter_mtus=cfg.drill_jitter_mtus, window_pkts=cfg.gbn_window_pkts,
-                capacity=cap_vec,
+                capacity=capv,
             )
             thr = thr[:, None]  # [W, 1]
         else:
@@ -400,13 +439,20 @@ def build_compact_sim(topo: Topology, cfg: SimConfig, trace_arrays, W: int, F_pa
                 fab = topo.fabric_links(
                     ca.sleaf, ca.dleaf, state.path[:, 0])[:, None, :]
             arrival, new_queue, p_mark, thr = dataplane.cascade_nic(
-                fab, ca.tx, ca.rx, rc, state.queue, cap_vec, qmask,
+                fab, ca.tx, ca.rx, rc, state.queue, capv, qmask,
                 n_links=nl, kmin=dparams.kmin_bytes, kmax=dparams.kmax_bytes,
                 pmax=dparams.pmax, dt=cfg.dt, qmax_bytes=cfg.qmax_bytes,
                 backend=cfg.dataplane,
             )
             p_sub, p_sub_fabric = dataplane.subflow_mark_probs_nic(
                 fab, ca.tx, ca.rx, p_mark, nl)
+            if loss_vec is not None:
+                # GBN amplification on lossy links: goodput deflates, the
+                # offered rate (already in the cascade above) does not
+                thr = thr * dataplane.lossy_gbn_factor(
+                    fab, ca.tx, ca.rx, loss_vec, n_links=nl,
+                    window_pkts=cfg.gbn_window_pkts,
+                )
         return arrival, new_queue, thr, p_sub, p_sub_fabric, rc, active
 
     def dcqcn_phase(state: CompactState, p_sub, active):
@@ -509,14 +555,19 @@ def plan_chunks(cfg: SimConfig, n_steps: int) -> tuple[int, int, int]:
 def run_core(topo: Topology, cfg: SimConfig, W: int, F_pad: int, A: int,
              n_steps: int, trace_arrays, finish0: jax.Array,
              capacity: jax.Array | None = None,
+             loss: jax.Array | None = None,
+             cap_seg_steps: int = 0,
              gate_admission: bool = False):
     """Jit-friendly core: sorted/padded trace arrays + a donatable +inf
     finish buffer in, (finish[F_pad] in sorted order, cnp_pkts, spill_steps,
     per-step outputs) out.  Wrapped and cached by netsim/sweep.py;
     vmap-able over a leading batch axis of (trace_arrays, finish0).
-    ``capacity`` (f32[n_links + 1]) is the TRACED link-capacity operand for
-    co-sim fault schedules — see ``build_compact_sim``; None keeps
-    ``topo.capacity`` baked in as a compile-time constant.
+    ``capacity`` (f32[n_links + 1], or a wall-clock schedule
+    f32[K, n_links + 1] stepped every ``cap_seg_steps`` — static — steps)
+    is the TRACED link-capacity operand for co-sim fault schedules, and
+    ``loss`` (f32[n_links + 1], traced) the per-link loss rates driving
+    go-back-N goodput amplification — see ``build_compact_sim``; None
+    keeps ``topo.capacity`` baked in as a compile-time constant.
 
     The horizon runs as K-step ``lax.scan`` chunks inside a ``while_loop``
     with EARLY EXIT: once every flow has been admitted and finished and the
@@ -530,7 +581,8 @@ def run_core(topo: Topology, cfg: SimConfig, W: int, F_pad: int, A: int,
     ever materialized."""
     _, step_fn, _ = build_compact_sim(topo, cfg, trace_arrays, W, F_pad, A,
                                       gate_admission=gate_admission,
-                                      capacity=capacity)
+                                      capacity=capacity, loss=loss,
+                                      cap_seg_steps=cap_seg_steps)
     init = init_compact_state(topo, cfg, W, F_pad, finish0, capacity=capacity)
     n_valid = jnp.sum(jnp.asarray(trace_arrays[5]).astype(jnp.int32))
     nl = topo.n_links

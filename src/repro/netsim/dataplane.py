@@ -252,6 +252,34 @@ def subflow_mark_probs_nic(
     return p_sub, p_sub_fabric
 
 
+def lossy_gbn_factor(
+    fab_links: jax.Array,  # i32[..., N, Hf] fabric link ids, -1 = hop absent
+    tx_link: jax.Array,  # i32[...]
+    rx_link: jax.Array,  # i32[...]
+    loss: jax.Array,  # f32[n_links + 1] per-link packet-loss rate
+    *,
+    n_links: int,
+    window_pkts: float,
+) -> jax.Array:
+    """Goodput multiplier f32[..., N] for sub-flows crossing LOSSY links
+    (faults.LossyLink): each drop rewinds a half go-back-N window on
+    average, so goodput deflates by ``gbn_goodput_factor(p_loss, W)``
+    while the DCQCN-offered rate keeps riding the wire — the retransmitted
+    bytes ARE offered load, which is why the engine applies this factor to
+    delivered throughput only (``thr``), never to the rates entering the
+    hop cascade.  Per-path p_loss composes across hops exactly like the
+    NIC-tiered mark product (``subflow_mark_probs_nic``): survival is the
+    product of per-hop survivals, host hops shared by the N sub-flows."""
+    from repro.core import gbn
+
+    lid = jnp.where(fab_links >= 0, fab_links, n_links)
+    hop_loss = jnp.where(fab_links >= 0, loss[lid], 0.0)
+    surv_fab = jnp.prod(1.0 - hop_loss, axis=-1)  # [..., N]
+    surv_host = (1.0 - loss[tx_link]) * (1.0 - loss[rx_link])  # [...]
+    p_loss = 1.0 - surv_host[..., None] * surv_fab
+    return gbn.gbn_goodput_factor(p_loss, window_pkts)
+
+
 def queue_mask_for(topo: Topology) -> jax.Array:
     """1.0 on links that queue and ECN-mark, 0.0 on host_tx (NIC-internal
     backlog, no ECN there) and on the -1 sentinel slot."""

@@ -33,6 +33,7 @@ worker count comes from REPRO_SWEEP_WORKERS (default: capped cpu count).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 import hashlib
 import os
@@ -103,7 +104,16 @@ def enable_compile_cache() -> str | None:
                 from jax._src import compilation_cache as _cc
 
                 _cc.reset_cache()
-            except Exception:  # very old jax: feature is best-effort
+            except (AttributeError, ImportError, TypeError, ValueError) as e:
+                # older jax spellings only — anything else should surface.
+                # degrading silently costs minutes of recompiles per process,
+                # so say it once out loud.
+                import warnings
+
+                warnings.warn(
+                    f"persistent XLA compile cache unavailable ({e!r}); "
+                    "sweep processes will recompile from scratch",
+                    RuntimeWarning, stacklevel=2)
                 return None
             _COMPILE_CACHE_SET = True
     return path
@@ -147,40 +157,48 @@ def _f_bucket(F: int) -> int:
 
 
 def _gated_b1(topo: Topology, cfg: SimConfig, W: int, F_pad: int, A: int,
-              n_steps: int):
+              n_steps: int, cap_seg_steps: int = 0):
     """Single-sim callable over [1, ...]-leading inputs: no vmap wrapper,
     and the admission block gated behind a REAL lax.cond branch (vmap
     would lower it to both-branches + select) — once arrivals drain (3/4
     of the horizon on paper traces) the O(W) admission work is skipped
     outright.  Shared by the plain B=1 and the one-sim-per-device pmap
-    dispatches.  Traced-capacity dispatches pass a third, UNBATCHED
-    capacity operand; the ``*cap`` varargs forward it to ``run_core``
-    unchanged (same callable serves both arities — the executable cache
-    key distinguishes them via ``_topo_key``'s traced sentinel)."""
+    dispatches.  Traced-operand dispatches pass extra UNBATCHED operands
+    (capacity, and with a fault campaign also the loss vector); the
+    ``*ops`` varargs forward them to ``run_core`` unchanged (same callable
+    serves every arity — the executable cache key distinguishes them)."""
     core = functools.partial(compact.run_core, topo, cfg, W, F_pad, A,
-                             n_steps, gate_admission=True)
+                             n_steps, cap_seg_steps=cap_seg_steps,
+                             gate_admission=True)
 
-    def fn_one(trace_arrays, finish0, *cap):
+    def fn_one(trace_arrays, finish0, *ops):
         squeeze = lambda a: jnp.squeeze(a, 0)
         out = core(jax.tree.map(squeeze, trace_arrays),
-                   jnp.squeeze(finish0, 0), *cap)
+                   jnp.squeeze(finish0, 0), *ops)
         return jax.tree.map(lambda a: a[None], out)
 
     return fn_one
 
 
 def _compiled(topo: Topology, cfg: SimConfig, W: int, F_pad: int, A: int,
-              n_steps: int, batch: int, traced_cap: bool = False):
-    key = (_topo_key(topo, traced_cap), cfg, W, F_pad, A, n_steps, batch)
+              n_steps: int, batch: int, n_ops: int = 0,
+              cap_seg_steps: int = 0, cap_rows: int = 1):
+    """``n_ops`` counts the traced operands after (trace_arrays, finish0):
+    0 = none, 1 = capacity, 2 = capacity + loss.  ``cap_seg_steps`` and
+    ``cap_rows`` (K of a 2-D schedule) are static shape/stride facts that
+    must key the executable alongside the shapes."""
+    key = (_topo_key(topo, n_ops > 0), cfg, W, F_pad, A, n_steps, batch,
+           n_ops, cap_seg_steps, cap_rows)
     fn = _JIT_CACHE.get(key)
     if fn is None:
         if batch == 1:
-            fn = jax.jit(_gated_b1(topo, cfg, W, F_pad, A, n_steps),
+            fn = jax.jit(_gated_b1(topo, cfg, W, F_pad, A, n_steps,
+                                   cap_seg_steps),
                          donate_argnums=(1,))
         else:
             core = functools.partial(compact.run_core, topo, cfg, W, F_pad,
-                                     A, n_steps)
-            in_axes = (0, 0, None) if traced_cap else (0, 0)
+                                     A, n_steps, cap_seg_steps=cap_seg_steps)
+            in_axes = (0, 0) + (None,) * n_ops
             fn = jax.jit(jax.vmap(core, in_axes=in_axes), donate_argnums=(1,))
         _JIT_CACHE[key] = fn
         _CACHE_STATS["builds"] += 1
@@ -199,26 +217,28 @@ def sweep_devices() -> int:
 
 def _compiled_sharded(topo: Topology, cfg: SimConfig, W: int, F_pad: int,
                       A: int, n_steps: int, per_dev: int, n_dev: int,
-                      traced_cap: bool = False):
+                      n_ops: int = 0, cap_seg_steps: int = 0,
+                      cap_rows: int = 1):
     """pmap-of-vmap executable: inputs carry a leading [n_dev, per_dev]
     batch, one shard per local device.  Each shard runs the identical
     vmapped compact scan, so per-sim results match the single-device path
-    (same program, same shapes — only the dispatch is parallel).  A traced
-    capacity operand is broadcast to every device (in_axes None)."""
-    key = (_topo_key(topo, traced_cap), cfg, W, F_pad, A, n_steps, per_dev,
-           n_dev, "pmap")
+    (same program, same shapes — only the dispatch is parallel).  Traced
+    operands (capacity [+ loss]) are broadcast to every device
+    (in_axes None)."""
+    key = (_topo_key(topo, n_ops > 0), cfg, W, F_pad, A, n_steps, per_dev,
+           n_dev, n_ops, cap_seg_steps, cap_rows, "pmap")
     fn = _JIT_CACHE.get(key)
     if fn is None:
         if per_dev == 1:
             # one sim per device: same gated, vmap-free core as the plain
             # batch==1 path
-            inner = _gated_b1(topo, cfg, W, F_pad, A, n_steps)
+            inner = _gated_b1(topo, cfg, W, F_pad, A, n_steps, cap_seg_steps)
         else:
             core = functools.partial(
-                compact.run_core, topo, cfg, W, F_pad, A, n_steps)
-            inner = jax.vmap(core, in_axes=(0, 0, None)) if traced_cap \
-                else jax.vmap(core)
-        in_axes = (0, 0, None) if traced_cap else (0, 0)
+                compact.run_core, topo, cfg, W, F_pad, A, n_steps,
+                cap_seg_steps=cap_seg_steps)
+            inner = jax.vmap(core, in_axes=(0, 0) + (None,) * n_ops)
+        in_axes = (0, 0) + (None,) * n_ops
         fn = jax.pmap(inner, devices=jax.local_devices()[:n_dev],
                       donate_argnums=(1,), in_axes=in_axes)
         _JIT_CACHE[key] = fn
@@ -292,17 +312,27 @@ def batch_mode() -> str:
     return "persim" if jax.default_backend() == "cpu" else "vmap"
 
 
-def _dispatch(topo, cfg, W, F_pad, A, n_steps, stacked, B, capacity=None):
+def _dispatch(topo, cfg, W, F_pad, A, n_steps, stacked, B, capacity=None,
+              loss=None, cap_seg_steps=0):
     """Run a stacked [B, ...] batch, returning (finish, cnp, spill, outs)
     with a leading [B] axis.  >1 local device: pad B up to a multiple of
     the device count (duplicating the last row — padding results are
     sliced off) and run one pmap-of-vmap, one batch shard per device.
     Single device: per-sim B=1 executions (cpu) or one jitted vmap — see
-    ``batch_mode``.  ``capacity`` (f32[n_links + 1], shared by the whole
-    batch) rides along as a traced operand when given — fault-schedule
-    sweeps then reuse one executable across capacity changes."""
-    traced_cap = capacity is not None
-    cap = (jnp.asarray(capacity, jnp.float32),) if traced_cap else ()
+    ``batch_mode``.  ``capacity`` (f32[n_links + 1] or a wall-clock
+    schedule f32[K, n_links + 1] with static segment stride
+    ``cap_seg_steps``, shared by the whole batch) rides along as a traced
+    operand when given — fault-schedule sweeps then reuse one executable
+    across capacity changes.  ``loss`` (f32[n_links + 1], requires
+    ``capacity``) adds the per-link loss-rate operand for go-back-N
+    goodput amplification (faults.LossyLink)."""
+    assert loss is None or capacity is not None, \
+        "loss operand requires an explicit capacity operand"
+    ops = () if capacity is None else (jnp.asarray(capacity, jnp.float32),)
+    if loss is not None:
+        ops = ops + (jnp.asarray(loss, jnp.float32),)
+    n_ops = len(ops)
+    cap_rows = ops[0].shape[0] if n_ops and ops[0].ndim == 2 else 1
     D = sweep_devices()
     if D > 1 and B > 1:
         D = min(D, B)
@@ -317,9 +347,9 @@ def _dispatch(topo, cfg, W, F_pad, A, n_steps, stacked, B, capacity=None):
             jnp.asarray(a.reshape((D, per) + a.shape[1:])) for a in stacked
         )
         fn = _compiled_sharded(topo, cfg, W, F_pad, A, n_steps, per, D,
-                               traced_cap)
+                               n_ops, cap_seg_steps, cap_rows)
         finish0 = jnp.full((D, per, F_pad), jnp.inf, jnp.float32)
-        out = fn(shaped, finish0, *cap)
+        out = fn(shaped, finish0, *ops)
         return jax.tree.map(
             lambda a: jnp.reshape(a, (Bp,) + a.shape[2:])[:B], out
         )
@@ -328,16 +358,19 @@ def _dispatch(topo, cfg, W, F_pad, A, n_steps, stacked, B, capacity=None):
         # program serves the whole loop
         parts = [
             _dispatch(topo, cfg, W, F_pad, A, n_steps,
-                      tuple(a[i:i + 1] for a in stacked), 1, capacity)
+                      tuple(a[i:i + 1] for a in stacked), 1, capacity,
+                      loss, cap_seg_steps)
             for i in range(B)
         ]
         return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *parts)
-    fn = _compiled(topo, cfg, W, F_pad, A, n_steps, B, traced_cap)
+    fn = _compiled(topo, cfg, W, F_pad, A, n_steps, B, n_ops, cap_seg_steps,
+                   cap_rows)
     finish0 = jnp.full((B, F_pad), jnp.inf, jnp.float32)
-    return fn(tuple(jnp.asarray(a) for a in stacked), finish0, *cap)
+    return fn(tuple(jnp.asarray(a) for a in stacked), finish0, *ops)
 
 
-def _run_group(topo, cfg, prepped, n_steps, window_slots, capacity=None):
+def _run_group(topo, cfg, prepped, n_steps, window_slots, capacity=None,
+               loss=None, cap_seg_steps=0):
     """One vmapped run over traces sharing an F_pad bucket, with the
     spill-retry loop: the concurrency bound is a heuristic, so any sim that
     reports spill_steps > 0 (an arrived flow found no free slot — its
@@ -365,7 +398,8 @@ def _run_group(topo, cfg, prepped, n_steps, window_slots, capacity=None):
         )
         t0 = time.time()
         finish, cnp, spill, outs = _dispatch(
-            topo, cfg, W, F_pad, A, n_steps, stacked, len(pending), capacity)
+            topo, cfg, W, F_pad, A, n_steps, stacked, len(pending), capacity,
+            loss, cap_seg_steps)
         spill = np.asarray(spill)
         finish = np.asarray(finish)
         cnp = np.asarray(cnp)
@@ -402,6 +436,8 @@ def run_batch(
     *,
     window_slots: int | None = None,
     capacity: np.ndarray | None = None,
+    loss: np.ndarray | None = None,
+    cap_seg_steps: int = 0,
 ) -> tuple[list[compact.CompactResult], list[StepOutputs]]:
     """Run every trace under one (scheme, topology) static pair as vmapped,
     donated, cached-compile computations — one per F_pad shape bucket, so a
@@ -412,9 +448,15 @@ def run_batch(
     fault schedules change link capacities per planning epoch, and threading
     them as data means every epoch reuses the one compiled program (the
     executable cache keys on a "traced" sentinel instead of the capacity
-    hash — see ``cache_stats``)."""
+    hash — see ``cache_stats``).  A 2-D schedule f32[K, n_links + 1] plus a
+    static ``cap_seg_steps`` stride extends that to wall-clock fault onsets
+    (faults.FaultCampaign).  ``loss`` (f32[n_links + 1]) adds the per-link
+    loss-rate operand (lossy-link go-back-N amplification); capacity is
+    promoted to ``topo.capacity`` automatically if only loss is given."""
     assert traces, "empty sweep"
     enable_compile_cache()
+    if loss is not None and capacity is None:
+        capacity = np.asarray(topo.capacity)
     prepped = [compact.sort_trace(t) for t in traces]
     n_steps = int(round(cfg.duration_s / cfg.dt))
     groups: dict[int, list[int]] = {}
@@ -424,7 +466,7 @@ def run_batch(
     outs_list: list = [None] * len(traces)
     for idxs in groups.values():
         res, outs = _run_group(topo, cfg, [prepped[i] for i in idxs], n_steps,
-                               window_slots, capacity)
+                               window_slots, capacity, loss, cap_seg_steps)
         for i, r, o in zip(idxs, res, outs):
             results[i] = r
             outs_list[i] = o
@@ -433,9 +475,12 @@ def run_batch(
 
 def run_one(topo: Topology, cfg: SimConfig, trace: Trace, *,
             window_slots: int | None = None,
-            capacity: np.ndarray | None = None):
+            capacity: np.ndarray | None = None,
+            loss: np.ndarray | None = None,
+            cap_seg_steps: int = 0):
     results, outs = run_batch(topo, cfg, [trace], window_slots=window_slots,
-                              capacity=capacity)
+                              capacity=capacity, loss=loss,
+                              cap_seg_steps=cap_seg_steps)
     return results[0], outs[0]
 
 
@@ -467,10 +512,50 @@ def _run_job(job):
     return run_batch(topo, cfg, traces, **kw)
 
 
+@dataclasses.dataclass(frozen=True)
+class JobFailure:
+    """Poisoned record a salvaged grid cell returns instead of its result:
+    the grid completes, the failure stays visible and attributable.  Check
+    ``isinstance(r, sweep.JobFailure)`` (or the ``failed`` marker) before
+    consuming grid results from a salvaging run."""
+
+    index: int  # position in the run_jobs list (results stay in job order)
+    attempts: int
+    error: str  # "ExcType: message" of the last attempt
+    elapsed_s: float
+    timed_out: bool = False
+
+    @property
+    def failed(self) -> bool:
+        return True
+
+
+def _run_job_resilient(job, index: int, *, retries: int, backoff_s: float,
+                       salvage: bool):
+    t0 = time.time()
+    for attempt in range(1, retries + 2):
+        try:
+            return _run_job(job)
+        except Exception as e:  # noqa: BLE001 — grid cells fail arbitrarily
+            if attempt <= retries:
+                time.sleep(min(backoff_s * (2 ** (attempt - 1)), 30.0))
+                continue
+            if not salvage:
+                raise
+            return JobFailure(index=index, attempts=attempt,
+                              error=f"{type(e).__name__}: {e}",
+                              elapsed_s=time.time() - t0)
+    raise AssertionError("unreachable")
+
+
 def run_jobs(
     jobs: list,
     *,
     workers: int | None = None,
+    timeout_s: float | None = None,
+    retries: int = 0,
+    backoff_s: float = 0.5,
+    salvage: bool = False,
 ) -> list:
     """Run independent sweep jobs (e.g. one per scheme, or one co-sim epoch
     loop per grid point — see ``_run_job`` for the accepted spellings)
@@ -482,6 +567,20 @@ def run_jobs(
     embarrassingly parallel at this level.  Results are returned in job
     order, identical to serial execution.
 
+    Crash-proofing (all off by default — the bare call is unchanged):
+
+      * ``retries``   — re-run a raising job up to this many extra times,
+        sleeping ``backoff_s * 2**attempt`` (capped at 30 s) between tries;
+        transient failures (OOM races, flaky I/O) get a second chance.
+      * ``salvage``   — a job that still fails returns a ``JobFailure``
+        poisoned record IN PLACE, instead of propagating and killing every
+        other cell of the grid; the caller decides what a dead cell costs.
+      * ``timeout_s`` — advisory per-job cap, enforced at collection time
+        (threads cannot be killed: a stuck job's slot is abandoned — its
+        cell salvages as ``timed_out`` — but the worker thread itself only
+        dies with the process).  Ignored on the serial (workers == 1)
+        path, where there is no second thread to collect from.
+
     Worker count resolution: explicit ``workers`` argument, else the
     REPRO_SWEEP_WORKERS env var, else a capped ``os.cpu_count()``."""
     import concurrent.futures as cf
@@ -490,7 +589,35 @@ def run_jobs(
     if workers is None:
         workers = default_workers(len(jobs))
     if workers == 1 or len(jobs) == 1:
-        return [_run_job(j) for j in jobs]
-    with cf.ThreadPoolExecutor(max_workers=workers) as pool:
-        futs = [pool.submit(_run_job, j) for j in jobs]
-        return [f.result() for f in futs]
+        return [
+            _run_job_resilient(j, i, retries=retries, backoff_s=backoff_s,
+                               salvage=salvage)
+            for i, j in enumerate(jobs)
+        ]
+    pool = cf.ThreadPoolExecutor(max_workers=workers)
+    timed_out = False
+    try:
+        futs = [
+            pool.submit(_run_job_resilient, j, i, retries=retries,
+                        backoff_s=backoff_s, salvage=salvage)
+            for i, j in enumerate(jobs)
+        ]
+        out = []
+        for i, f in enumerate(futs):
+            try:
+                out.append(f.result(timeout=timeout_s))
+            except cf.TimeoutError:
+                timed_out = True
+                if not salvage:
+                    raise
+                out.append(JobFailure(index=i, attempts=1,
+                                      error="TimeoutError: job still running",
+                                      elapsed_s=float(timeout_s or 0.0),
+                                      timed_out=True))
+        return out
+    finally:
+        # a hung job's thread cannot be killed — but shutdown(wait=True)
+        # would BLOCK the whole pool behind it, turning one stuck cell back
+        # into a wedged sweep.  Abandon the slot; the thread dies with the
+        # process (exactly the advisory contract documented above).
+        pool.shutdown(wait=not timed_out, cancel_futures=timed_out)

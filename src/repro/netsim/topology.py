@@ -270,6 +270,49 @@ def spine_links(topo: Topology, spine: int) -> tuple[int, ...]:
     )
 
 
+def paths_for_link(topo: Topology, link: int) -> tuple[int, ...]:
+    """Inverse of the fabric hop layout: which path ids traverse flat link
+    ``link``.  Host tx/rx links (and the dummy sink) belong to no path ->
+    empty tuple.  Used by the fault layer to turn a per-LINK event (a
+    flapping port, a lossy optic) into the per-PATH quarantine set the
+    planner speaks (``dist.netfeed.report_congestion``, in-epoch
+    replanning in ``dist.cosim``).
+
+    * ``leaf_spine``: up[l, s] and down[s, l] both map to path s.
+    * ``three_tier`` (path = agg * C + core): ToR up/downlinks of agg a
+      cover all C paths (a, *); agg<->core links pin a single (agg, core).
+    """
+    if topo.kind == "leaf_spine":
+        L, S = topo.n_leaf, topo.n_paths
+        if link < L * S:  # up[l, s] = l*S + s
+            return (link % S,)
+        if link < 2 * L * S:  # down[s, l] = L*S + s*L + l
+            return ((link - L * S) // L,)
+        return ()
+    assert topo.kind == "three_tier", topo.kind
+    T = topo.n_leaf
+    A = topo.uplink_ids.shape[1]
+    C = topo.n_paths // A
+    ta0, ac0 = 0, T * A
+    ca0 = T * A + A * C
+    at0 = T * A + 2 * A * C
+    tx0 = at0 + A * T
+    if link < ac0:  # ta[t, a] = t*A + a
+        a = link % A
+        return tuple(a * C + c for c in range(C))
+    if link < ca0:  # ac[a, c] = ac0 + a*C + c
+        i = link - ac0
+        return ((i // C) * C + (i % C),)
+    if link < at0:  # ca[c, a]
+        i = link - ca0
+        c, a = i // A, i % A
+        return (a * C + c,)
+    if link < tx0:  # at[a, t] = at0 + a*T + t
+        a = (link - at0) // T
+        return tuple(a * C + c for c in range(C))
+    return ()
+
+
 def testbed_symmetric() -> Topology:
     """Paper Fig. 8(a): 2 leaves x 4 spines, 3 hosts/leaf, all 40G."""
     return leaf_spine(2, 4, 3, 40e9, base_rtt_s=4e-6)

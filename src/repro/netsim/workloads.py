@@ -211,6 +211,7 @@ def collective_trace(
     round_gap_s: float | None = None,
     seed: int = 0,
     steer_paths: int | None = None,
+    steer_targets: np.ndarray | None = None,
 ) -> Trace:
     """AI-training traffic mode: the ring schedule of a grad-sync PathPlan
     (``repro.dist.collectives.PathPlan`` — duck-typed: anything with
@@ -248,6 +249,16 @@ def collective_trace(
     route AROUND them — the whole Fig. 11 convergence story.  Without
     ``steer_paths`` the plan only shapes the traffic matrix and the
     fabric re-rolls paths by hash.
+
+    ``steer_targets`` (int [n_chunks, n], needs ``steer_paths``) overrides
+    the default spread with an EXPLICIT per-QP fabric target.  This is the
+    in-epoch replanning hook (``dist.cosim``): the caller pins every
+    surviving QP to exactly the target it had before a mid-collective
+    fault — keeping its flow id, hence its path, hence its packet order —
+    and re-steers only the QPs whose target died.  The default spread
+    formula recomputes from the ACTIVE set, which shifts every QP's target
+    when the set shrinks; that is fine between collectives but would be a
+    mass reorder inside one.
     """
     hosts = np.asarray(hosts, np.int64)
     n = int(hosts.size)
@@ -273,9 +284,13 @@ def collective_trace(
                           for c in range(n_chunks)], np.int64)
         q_dst = np.array([[hosts[(i + dirs[c]) % n] for i in range(n)]
                           for c in range(n_chunks)], np.int64)
-        q_target = np.array(
-            [[active[(i * n_chunks + c) % len(active)] for i in range(n)]
-             for c in range(n_chunks)], np.int32)
+        if steer_targets is not None:
+            q_target = np.asarray(steer_targets, np.int32).reshape(n_chunks, n)
+            assert int(q_target.max()) < steer_paths, (q_target, steer_paths)
+        else:
+            q_target = np.array(
+                [[active[(i * n_chunks + c) % len(active)] for i in range(n)]
+                 for c in range(n_chunks)], np.int32)
         qp_fid = _ecmp_steered_fids(
             q_src.reshape(-1), q_dst.reshape(-1), qp_fid.reshape(-1),
             q_target.reshape(-1), steer_paths).reshape(n_chunks, n)
@@ -298,6 +313,27 @@ def collective_trace(
         dst=np.asarray(dst, np.int32),
         flow_id=flow_id,
         valid=np.ones(f, bool),
+    )
+
+
+def merge_traces(*traces: Trace) -> Trace:
+    """Concatenate traces into one (the engine sorts by arrival itself).
+
+    The in-epoch replanning path (``dist.cosim``) renders a collective as
+    two segments — rounds before the fault onset under the original plan,
+    rounds after under the replanned one — and merges them into the single
+    Trace the sweep runner consumes.  Flow ids are NOT remapped: a chunk
+    whose path survived the replan keeps the same QP fid in both segments,
+    which is exactly the no-reordering invariant (same five-tuple -> same
+    fabric path before and after the cut)."""
+    assert traces, "nothing to merge"
+    return Trace(
+        sizes=np.concatenate([t.sizes for t in traces]),
+        arrivals=np.concatenate([t.arrivals for t in traces]),
+        src=np.concatenate([t.src for t in traces]),
+        dst=np.concatenate([t.dst for t in traces]),
+        flow_id=np.concatenate([t.flow_id for t in traces]),
+        valid=np.concatenate([t.valid for t in traces]),
     )
 
 

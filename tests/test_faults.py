@@ -1,0 +1,563 @@
+"""Chaos campaign framework (netsim.faults + the chaos-aware co-sim):
+
+  * the fault vocabulary validates its schedules at construction (a
+    typo'd event must fail loudly, not run a vacuously healthy epoch);
+  * wall-clock capacity schedules cut flaps/pauses into the fixed-K
+    segment grid the compact engine indexes with a static stride;
+  * lossy links drive go-back-N goodput amplification INSIDE the
+    dataplane — FCTs inflate while the compiled program is reused;
+  * in-epoch replanning never reorders an in-flight QP: pre-cut rounds
+    keep their flow ids, surviving steered QPs keep theirs across the
+    cut, only dead-target QPs re-steer, ring directions never flip;
+  * the sweep pool survives crashing / hanging jobs (retry, salvage,
+    timeout) and the campaign journal resumes an interrupted run.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+# ----------------------------------------------------- fault vocabulary
+def test_fault_event_validation():
+    from repro.dist.cosim import FaultEvent
+
+    FaultEvent(1, (3, 4), 0.0, 2)  # well-formed
+    with pytest.raises(AssertionError):
+        FaultEvent(1, (), 0.0, 2)  # no links: silently applies to nothing
+    with pytest.raises(AssertionError):
+        FaultEvent(-1, (3,), 0.0)
+    with pytest.raises(AssertionError):
+        FaultEvent(2, (3,), 0.0, 2)  # end <= start: never active
+    with pytest.raises(AssertionError):
+        FaultEvent(1, (3,), -0.5, 2)
+
+
+def test_campaign_event_validation():
+    from repro.netsim import faults
+
+    with pytest.raises(AssertionError):
+        faults.LinkFlap(links=(), start_epoch=1)
+    with pytest.raises(AssertionError):
+        faults.LinkFlap(links=(1,), start_epoch=1, duty=0.0)
+    with pytest.raises(AssertionError):
+        faults.LinkFlap(links=(1,), start_epoch=1, onset_frac=1.0)
+    with pytest.raises(AssertionError):
+        faults.Brownout(links=(1,), scale=1.0, start_epoch=0)  # not a fault
+    with pytest.raises(AssertionError):
+        faults.LossyLink(links=(1,), loss_rate=0.0, start_epoch=0)
+    with pytest.raises(AssertionError):
+        faults.PauseWindow(links=(1,), start_epoch=2, end_epoch=2)
+    with pytest.raises(AssertionError):
+        faults.Straggler(rank=0, slowdown=1.0, start_epoch=0)  # not slow
+    with pytest.raises(AssertionError):
+        faults.FaultCampaign(events=(object(),))  # no .active(epoch)
+
+
+def test_capacity_schedule_flap_segments():
+    from repro.netsim import faults, topology
+
+    topo = topology.leaf_spine(2, 4, 2, 40e9)
+    links = topology.spine_links(topo, 1)
+    ev = faults.LinkFlap(links=links, start_epoch=1, end_epoch=3,
+                         period_frac=0.5, duty=0.5, scale=0.0)
+    camp = faults.FaultCampaign(events=(ev,), n_segments=8)
+    base = np.asarray(topo.capacity, np.float32)
+
+    cap0 = camp.capacity_schedule(topo, 0)  # inactive epoch: all-healthy
+    assert cap0.shape == (8, topo.n_links + 1)
+    np.testing.assert_array_equal(cap0, np.repeat(base[None], 8, axis=0))
+
+    # cycle = 4 segments, down for the first 2 of each: k in {0,1,4,5}
+    cap1 = camp.capacity_schedule(topo, 1)
+    down = np.array([cap1[k, links[0]] == 0.0 for k in range(8)])
+    np.testing.assert_array_equal(
+        down, [True, True, False, False, True, True, False, False])
+    untouched = [l for l in range(topo.n_links) if l not in set(links)]
+    np.testing.assert_array_equal(cap1[:, untouched],
+                                  np.repeat(base[None], 8, axis=0)[:, untouched])
+
+    # onset_frac delays the first down segment ONLY in the start epoch
+    ev2 = faults.LinkFlap(links=links, start_epoch=1, end_epoch=3,
+                          duty=1.0, onset_frac=0.5, scale=0.0)
+    camp2 = faults.FaultCampaign(events=(ev2,), n_segments=8)
+    c1 = camp2.capacity_schedule(topo, 1)
+    c2 = camp2.capacity_schedule(topo, 2)
+    assert [c1[k, links[0]] == 0.0 for k in range(8)] == [False] * 4 + [True] * 4
+    assert all(c2[k, links[0]] == 0.0 for k in range(8))
+
+    # seg_steps covers the horizon with the LAST row absorbing the remainder
+    assert camp.seg_steps(100) == 13 and camp.seg_steps(3) == 1
+
+
+def test_capacity_schedule_pause_and_brownout():
+    from repro.netsim import faults, topology
+
+    topo = topology.leaf_spine(2, 4, 2, 40e9)
+    links = topology.spine_links(topo, 0)
+    camp = faults.FaultCampaign(events=(
+        faults.PauseWindow(links=links, start_epoch=0, onset_frac=0.25,
+                           width_frac=0.25),
+        faults.Brownout(links=topology.spine_links(topo, 2), scale=0.5,
+                        start_epoch=0),
+    ), n_segments=8)
+    cap = camp.capacity_schedule(topo, 0)
+    paused = [bool(cap[k, links[0]] == 0.0) for k in range(8)]
+    assert paused == [False, False, True, True, False, False, False, False]
+    b = topology.spine_links(topo, 2)[0]
+    assert np.allclose(cap[:, b], 0.5 * np.float32(topo.capacity[b]))
+
+
+def test_loss_vector_merge_and_arity():
+    from repro.netsim import faults, topology
+
+    topo = topology.leaf_spine(2, 4, 2, 40e9)
+    l01 = topology.spine_links(topo, 0) + topology.spine_links(topo, 1)
+    camp = faults.FaultCampaign(events=(
+        faults.LossyLink(links=topology.spine_links(topo, 0), loss_rate=0.01,
+                         start_epoch=1, end_epoch=3),
+        faults.LossyLink(links=l01, loss_rate=0.002, start_epoch=1),
+    ))
+    clean = camp.loss_at(topo, 0)  # arity never changes: zeros when clean
+    assert clean.shape == (topo.n_links + 1,) and not clean.any()
+    loss = camp.loss_at(topo, 1)
+    # overlapping lossy events merge by MAX, not sum
+    assert loss[topology.spine_links(topo, 0)[0]] == np.float32(0.01)
+    assert loss[topology.spine_links(topo, 1)[0]] == np.float32(0.002)
+    loss3 = camp.loss_at(topo, 3)  # first event expired
+    assert loss3[topology.spine_links(topo, 0)[0]] == np.float32(0.002)
+
+
+def test_paths_for_link_inverts_spine_links():
+    from repro.netsim import topology
+    from repro.netsim.topology import paths_for_link, spine_links
+
+    for topo in (topology.leaf_spine(2, 4, 2, 40e9),
+                 topology.three_tier(4, 2, 2, 2, 100e9)):
+        n_spines = topo.uplink_ids.shape[1]
+        n_core = topo.n_paths // n_spines
+        for s in range(n_spines):
+            want = set(range(s * n_core, (s + 1) * n_core))
+            for link in spine_links(topo, s):
+                got = set(paths_for_link(topo, link))
+                assert got and got <= want, (s, link, got, want)
+        # host tx/rx links select no fabric path
+        assert paths_for_link(topo, topo.n_links - 1) == ()
+
+
+def test_random_campaign_deterministic():
+    from repro.netsim import faults, topology
+
+    topo = topology.leaf_spine(2, 4, 2, 40e9)
+    a = faults.random_campaign(topo, seed=7, epochs=6, n_faults=4, n_ranks=6)
+    b = faults.random_campaign(topo, seed=7, epochs=6, n_faults=4, n_ranks=6)
+    assert a == b and len(a.events) == 4
+    c = faults.random_campaign(topo, seed=8, epochs=6, n_faults=4, n_ranks=6)
+    assert a != c
+    # straggler kind is only drawable when the ring size is known
+    d = faults.random_campaign(topo, seed=7, epochs=6, n_faults=8,
+                               kinds=("straggler", "lossy"), n_ranks=0)
+    assert not d.has_stragglers()
+
+
+# -------------------------------------------------- lossy links (GBN)
+def test_lossy_gbn_factor_composes_per_hop():
+    import jax.numpy as jnp
+
+    from repro.core import gbn
+    from repro.netsim import dataplane
+
+    nl = 10
+    loss = np.zeros(nl + 1, np.float32)
+    loss[3], loss[7] = 0.01, 0.02
+    # two flows, one sub-flow each with two fabric hops ([W, N, Hf]):
+    # flow 0 crosses both lossy links, flow 1 is clean (-1 = hop absent)
+    fab = jnp.asarray([[[3, 7]], [[-1, -1]]], jnp.int32)
+    tx = jnp.asarray([8, 8], jnp.int32)
+    rx = jnp.asarray([9, 9], jnp.int32)
+    f = dataplane.lossy_gbn_factor(fab, tx, rx, jnp.asarray(loss),
+                                   n_links=nl, window_pkts=64)
+    assert f.shape == (2, 1)
+    p = 1.0 - (1.0 - 0.01) * (1.0 - 0.02)  # survival composes per hop
+    want = gbn.gbn_goodput_factor(jnp.float32(p), 64)
+    np.testing.assert_allclose(float(f[0, 0]), float(want), rtol=1e-6)
+    assert float(f[1, 0]) == 1.0  # clean path: no amplification
+
+    # a lossy HOST link hits every sub-flow of the flow behind that NIC
+    loss2 = np.zeros(nl + 1, np.float32)
+    loss2[8] = 0.05
+    f2 = dataplane.lossy_gbn_factor(fab, tx, rx, jnp.asarray(loss2),
+                                    n_links=nl, window_pkts=64)
+    want2 = gbn.gbn_goodput_factor(jnp.float32(0.05), 64)
+    np.testing.assert_allclose(np.asarray(f2),
+                               float(want2) * np.ones((2, 1)), rtol=1e-6)
+
+
+def test_lossy_link_inflates_fct_same_program():
+    from repro.netsim import sweep, topology, workloads
+    from repro.netsim.engine import SimConfig
+
+    topo = topology.leaf_spine(2, 4, 2, 40e9)
+    tr = workloads.poisson_trace(workloads.TraceConfig(
+        workload="fixed:5e5", load=0.3, duration_s=1e-3, n_hosts=topo.n_hosts,
+        host_bw=40e9, seed=5, hosts_per_leaf=2))
+    cfg = SimConfig(scheme="ecmp", duration_s=1e-3)
+    cap = np.asarray(topo.capacity, np.float32).copy()
+    zeros = np.zeros(topo.n_links + 1, np.float32)
+    lossy = zeros.copy()
+    lossy[:2 * 4] = 0.005  # every leaf->spine link drops 0.5%
+
+    r_clean, _ = sweep.run_one(topo, cfg, tr, capacity=cap, loss=zeros)
+    before = sweep.cache_stats()["builds"]
+    r_lossy, _ = sweep.run_one(topo, cfg, tr, capacity=cap, loss=lossy)
+    assert sweep.cache_stats()["builds"] == before  # loss is a traced operand
+    fin_c, fin_l = np.asarray(r_clean.finish), np.asarray(r_lossy.finish)
+    done = np.isfinite(fin_c) & np.isfinite(fin_l)
+    assert done.sum() >= 10
+    # GBN rewinds stretch finish times: slower on average, never faster,
+    # and loss can only censor MORE flows at the horizon
+    assert fin_l[done].mean() > 1.02 * fin_c[done].mean()
+    assert (fin_l[done] >= fin_c[done] - 1e-9).all()
+    assert np.isfinite(fin_l).sum() <= np.isfinite(fin_c).sum()
+
+    # a zero-loss vector is bit-identical to no loss operand at all
+    r_none, _ = sweep.run_one(topo, cfg, tr, capacity=cap)
+    np.testing.assert_array_equal(np.asarray(r_none.finish), fin_c)
+
+
+# --------------------------------------------------- in-epoch replanning
+def test_replan_chunk_paths_rules():
+    from repro.dist.collectives import replan_chunk_paths
+
+    dirs = (1, -1, 1, -1)
+    paths = (0, 1, 2, 3, 0, 1)
+    # path 1 dies: its chunks move to the OTHER -1 path; same-direction only
+    out = replan_chunk_paths(paths, dirs, (False, True, False, False))
+    assert out == (0, 3, 2, 3, 0, 3)
+    # in-flight chunks never move, even off a dead path
+    out = replan_chunk_paths(paths, dirs, (False, True, False, False),
+                             in_flight=(1,))
+    assert out == (0, 1, 2, 3, 0, 3)
+    # both -1 paths dead: chunks STAY (in-order on a slow path beats a flip)
+    out = replan_chunk_paths(paths, dirs, (False, True, False, True))
+    assert out == paths
+    # healthy chunks are never touched
+    out = replan_chunk_paths(paths, dirs, (True, False, False, False))
+    assert out[1:4] == (1, 2, 3) and out[5] == 1
+    assert out[0] == 2 and out[4] == 2  # migrants round-robin over {2}
+
+
+def test_pinned_plan_duck_types_path_plan():
+    from repro.dist.collectives import PathPlan, PinnedPlan
+
+    pp = PinnedPlan(n_chunks=3, directions=(1, -1), inactive=(False, True),
+                    paths=(0, 0, 1))
+    assert pp.chunk_paths() == (0, 0, 1) and pp.n_paths == 2
+    with pytest.raises(AssertionError):
+        PinnedPlan(n_chunks=2, directions=(1, -1), inactive=(False, False),
+                   paths=(0, 5))  # out-of-range path
+    base = PathPlan(n_chunks=3, directions=(1, -1), inactive=(False, True))
+    assert base.chunk_paths() == (0, 0, 0)  # round-robin over survivors
+
+
+def _split_steered_traces(n_paths=4, dead=(1,), rounds_a=3):
+    """Mirror dist.cosim's replanning trace construction: segment a under
+    the original plan, segment b under the pinned replanned plan with only
+    dead-target QPs re-steered."""
+    from repro.dist import collectives
+    from repro.netsim import workloads
+
+    plan = collectives.PathPlan(n_chunks=4,
+                                directions=(1, -1, 1, -1)[:n_paths])
+    hosts, n, gap = list(range(6)), 6, 1e-5
+    rounds = 2 * (n - 1)
+    active0 = list(range(n_paths))
+    tgt = np.array([[active0[(i * plan.n_chunks + c) % len(active0)]
+                     for i in range(n)] for c in range(plan.n_chunks)],
+                   np.int32)
+    inact2 = tuple(p in set(dead) for p in range(n_paths))
+    pinned = collectives.PinnedPlan(
+        n_chunks=plan.n_chunks, directions=tuple(plan.directions),
+        inactive=inact2,
+        paths=collectives.replan_chunk_paths(
+            plan.chunk_paths(), tuple(plan.directions), inact2))
+    surv = [p for p in active0 if p not in set(dead)] or [0]
+    tgt_b, k = tgt.copy(), 0
+    for c in range(plan.n_chunks):
+        for i in range(n):
+            if int(tgt[c, i]) in set(dead):
+                tgt_b[c, i] = surv[k % len(surv)]
+                k += 1
+    kw = dict(link_bw=40e9, round_gap_s=gap, seed=3, steer_paths=n_paths)
+    tr_a = workloads.collective_trace(plan, hosts, 1e6, rounds=rounds_a,
+                                      steer_targets=tgt, **kw)
+    tr_b = workloads.collective_trace(pinned, hosts, 1e6,
+                                      rounds=rounds - rounds_a,
+                                      start_s=rounds_a * gap,
+                                      steer_targets=tgt_b, **kw)
+    full = workloads.collective_trace(plan, hosts, 1e6, rounds=rounds, **kw)
+    return (workloads.merge_traces(tr_a, tr_b), full, tgt, tgt_b,
+            plan, rounds_a, rounds, n)
+
+
+def test_replan_trace_never_reorders_inflight_qps():
+    merged, full, tgt, tgt_b, plan, ra, rounds, n = _split_steered_traces()
+    C = plan.n_chunks
+    fid = merged.flow_id.reshape(rounds, C, n)
+    fid_full = full.flow_id.reshape(rounds, C, n)
+    src = merged.src.reshape(rounds, C, n)
+    dst = merged.dst.reshape(rounds, C, n)
+
+    # pre-cut rounds are BIT-IDENTICAL to the unreplanned collective: the
+    # packets already on the wire cannot be renamed retroactively
+    np.testing.assert_array_equal(fid[:ra], fid_full[:ra])
+
+    # within each segment every QP keeps one fid for all its rounds
+    for seg in (fid[:ra], fid[ra:]):
+        assert (seg == seg[0]).all()
+
+    # across the cut: surviving-target QPs keep their fid (same five-tuple
+    # -> same fabric path -> no reorder); ONLY dead-target QPs re-steer
+    changed = fid[ra] != fid[0]
+    np.testing.assert_array_equal(changed, tgt != tgt_b)
+    assert changed.any() and not changed.all()
+
+    # ring directions never flip: per-(chunk, member) src/dst identical in
+    # every round, before and after the cut
+    assert (src == src[0]).all() and (dst == dst[0]).all()
+
+    # arrivals stay monotone across the merge (segment b starts at the cut)
+    arr = merged.arrivals.reshape(rounds, C, n)
+    assert (np.diff(arr[:, 0, 0]) > 0).all()
+
+
+def test_run_cosim_replans_and_improves_onset_epoch():
+    from repro.dist import cosim
+    from repro.netsim import faults, topology
+
+    topo = topology.leaf_spine(4, 4, 2, 100e9)
+    camp = faults.FaultCampaign(events=(
+        faults.LinkFlap(links=topology.spine_links(topo, 1), start_epoch=1,
+                        end_epoch=3, duty=1.0, onset_frac=0.02, scale=0.0),))
+    hosts = cosim.ring_hosts(topo, 6)
+    kw = dict(scheme="ecmp", epochs=3, campaign=camp, phi_steps=2,
+              n_chunks=4, seed=0, detect_delay_s=3.3e-5)
+    h_re = cosim.run_cosim(topo, hosts, 1.2e6, replan=True, **kw)
+    h_no = cosim.run_cosim(topo, hosts, 1.2e6, replan=False, **kw)
+    r_re, r_no = h_re.records[1], h_no.records[1]
+    assert r_re.replan_round > 0 and r_no.replan_round == -1
+    # rerouting the tail rounds completes strictly more flows in the
+    # fault epoch than riding the dead path to the horizon
+    assert r_re.completion > r_no.completion
+    # healthy epochs never replan, and the epoch after the onset routes
+    # around the quarantined path entirely
+    assert h_re.records[0].replan_round == -1
+    assert h_re.records[2].completion == 1.0
+    # campaign epochs reuse the one compiled program after epoch 0
+    assert sum(r.new_builds for r in h_re.records[1:]) == 0
+
+
+# -------------------------------------------------------- phi hysteresis
+def test_hysteresis_doubles_phi_for_flappers():
+    from repro.dist.elastic import LinkHealth
+
+    # default cooldown_steps=0 is bit-exact legacy: phi never extends
+    h0 = LinkHealth(n_paths=4, phi_steps=2)
+    h0.report_slow(1, 0)
+    h0.report_slow(1, 2)  # re-report exactly at expiry
+    assert h0.phi_of(1) == 2 and h0.expiry(1) == 4
+
+    h = LinkHealth(n_paths=4, phi_steps=2, cooldown_steps=2)
+    h.report_slow(1, 0)
+    assert h.expiry(1) == 2
+    h.report_slow(1, 2)  # released and slow again inside cooldown: flapper
+    assert h.phi_of(1) == 4 and h.expiry(1) == 6
+    h.report_slow(1, 6)  # still flapping: doubles again
+    assert h.phi_of(1) == 8 and h.expiry(1) == 14
+    h.report_slow(1, 50)  # clean recovery, well past cooldown: reset
+    assert h.phi_of(1) == 2 and h.expiry(1) == 52
+    # a report while still quarantined refreshes but does NOT double
+    h.report_slow(1, 51)
+    assert h.phi_of(1) == 2 and h.expiry(1) == 53
+
+    hc = LinkHealth(n_paths=4, phi_steps=2, cooldown_steps=2, max_phi_steps=4)
+    hc.report_slow(0, 0)
+    hc.report_slow(0, 2)
+    hc.report_slow(0, 6)
+    assert hc.phi_of(0) == 4  # capped
+
+    # state round-trips through the journal snapshot
+    h2 = LinkHealth(n_paths=4, phi_steps=2, cooldown_steps=2)
+    h2.restore(h.state())
+    assert h2.inactive(52) == h.inactive(52) and h2.phi_of(1) == h.phi_of(1)
+
+
+# ------------------------------------------------------ straggler policy
+def test_straggler_policy_quarantine_and_recovery():
+    from repro.dist.elastic import StragglerPolicy
+
+    p = StragglerPolicy(deadline_s=1.0, max_misses=3)
+    assert p.observe(2, 0.9) == "ok"
+    assert p.observe(2, 1.5) == "warn" and p.misses(2) == 1
+    assert p.observe(2, 1.5) == "warn" and p.misses(2) == 2
+    assert p.observe(2, 1.5) == "quarantine"
+    assert p.quarantined() == (2,)
+    assert p.observe(2, 1.5) == "quarantine"  # stays benched while slow
+    assert p.observe(2, 0.5) == "ok"  # ONE on-time step recovers
+    assert p.quarantined() == () and p.misses(2) == 0
+
+    p.observe(0, 9.9)
+    q = StragglerPolicy(deadline_s=1.0, max_misses=3)
+    q.restore(p.state())
+    assert q.misses(0) == 1 and q.quarantined() == p.quarantined()
+
+
+def test_cosim_straggler_wiring():
+    from repro.dist import cosim
+    from repro.netsim import faults, topology
+
+    topo = topology.leaf_spine(4, 4, 2, 100e9)
+    camp = faults.FaultCampaign(events=(
+        faults.Straggler(rank=3, slowdown=3.0, start_epoch=1, end_epoch=4),))
+    hosts = cosim.ring_hosts(topo, 6)
+    # horizon pinned so the 3x-stretched cadence OVERRUNS it (the honest
+    # cost of a gating straggler) while the healthy cadence fits: the ring
+    # gap is 16us here, so 10 rounds need 144us healthy vs 432us straggled
+    h = cosim.run_cosim(topo, hosts, 1.2e6, scheme="ecmp", epochs=5,
+                        campaign=camp, phi_steps=2, n_chunks=4, seed=0,
+                        duration_s=2.4e-4)
+    scale = [r.straggler_scale for r in h.records]
+    quar = [r.straggler_quarantined for r in h.records]
+    # epoch 1: the straggler gates the ring (first deadline miss = warn);
+    # epoch 2: second miss hits max_misses=2 — benched, and the cadence
+    # recovers WHILE the fault is still active; epoch 4: one on-time
+    # observation un-benches it
+    assert scale == [1.0, 3.0, 1.0, 1.0, 1.0]
+    assert quar == [(), (), (3,), (3,), ()]
+    # the stretched epoch pays for it in completion; the benched epoch
+    # returns to the healthy cadence
+    assert h.records[1].completion < 1.0 <= h.records[2].completion
+
+
+# ----------------------------------------------------- crash-proof pool
+def test_run_jobs_retry_salvage_timeout():
+    import time
+
+    from repro.netsim import sweep
+
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError("transient")
+        return "ok"
+
+    def dead():
+        raise ValueError("permanent wreck")
+
+    def fine():
+        return 42
+
+    # retry: a transiently failing job succeeds within its retry budget
+    out = sweep.run_jobs([flaky], workers=1, retries=2, backoff_s=0.0)
+    assert out == ["ok"] and calls["n"] == 3
+
+    # salvage: a permanently failing job yields a poisoned record AT ITS
+    # INDEX; completed siblings are not burned
+    out = sweep.run_jobs([fine, dead, fine], workers=2, retries=1,
+                         backoff_s=0.0, salvage=True)
+    assert out[0] == 42 and out[2] == 42
+    fail = out[1]
+    assert isinstance(fail, sweep.JobFailure) and fail.failed
+    assert fail.index == 1 and fail.attempts == 2
+    assert "permanent wreck" in fail.error and not fail.timed_out
+
+    # without salvage the pool raises (legacy contract)
+    with pytest.raises(ValueError):
+        sweep.run_jobs([fine, dead], workers=2)
+
+    # timeout: a hung job is censored as timed_out instead of wedging the
+    # pool (the abandoned thread dies on its own; keep its sleep short so
+    # interpreter shutdown doesn't wait on it either)
+    def hung():
+        time.sleep(5.0)
+
+    t0 = time.time()
+    out = sweep.run_jobs([fine, hung], workers=2, timeout_s=0.5, salvage=True)
+    assert time.time() - t0 < 4.0
+    assert out[0] == 42
+    assert isinstance(out[1], sweep.JobFailure) and out[1].timed_out
+
+
+def test_run_cosim_grid_salvages_poisoned_cells():
+    from repro.dist import cosim
+    from repro.netsim import sweep, topology
+
+    topo = topology.leaf_spine(2, 4, 2, 40e9)
+    good = dict(topo=topo, hosts=cosim.ring_hosts(topo, 4),
+                size_bytes=4e5, scheme="ecmp", epochs=2, phi_steps=2,
+                n_chunks=4, seed=0)
+    bad = dict(good, n_chunks=0)  # PathPlan asserts n_chunks >= 1
+    out = cosim.run_cosim_grid([good, bad], workers=1, salvage=True)
+    assert out[0].epochs == 2
+    assert isinstance(out[1], sweep.JobFailure) and out[1].index == 1
+
+
+# ------------------------------------------------------- epoch journal
+def _journal_spec(topo, journal=None):
+    from repro.dist import cosim
+
+    return dict(topo=topo, hosts=cosim.ring_hosts(topo, 4), size_bytes=4e5,
+                scheme="ecmp", epochs=4, phi_steps=2, n_chunks=4, seed=0,
+                faults=(cosim.kill_spine(topo, 1, epoch=1, recover_epoch=2),),
+                journal=journal)
+
+
+def test_journal_resume_matches_uninterrupted(tmp_path):
+    from repro.dist import cosim
+    from repro.netsim import topology
+
+    topo = topology.leaf_spine(2, 4, 2, 40e9)
+    jp = str(tmp_path / "campaign.jsonl")
+    h_full = cosim.run_cosim(**_journal_spec(topo))
+    cosim.run_cosim(**_journal_spec(topo, jp))
+
+    # interrupt after epoch 1: keep header + two epoch lines, tear the rest
+    lines = open(jp).read().splitlines()
+    assert len(lines) == 5  # header + 4 epochs
+    with open(jp, "w") as fh:
+        fh.write("\n".join(lines[:3]) + "\n")
+        fh.write(lines[3][: len(lines[3]) // 2])  # torn mid-write tail
+
+    h_res = cosim.run_cosim(**_journal_spec(topo, jp))
+    assert h_res.epochs == h_full.epochs
+    for a, b in zip(h_full.records, h_res.records):
+        assert a.epoch == b.epoch
+        assert a.quarantined == b.quarantined
+        assert a.completion == b.completion
+        np.testing.assert_allclose(a.fct, b.fct, rtol=1e-6)
+    assert h_res.final_plan.inactive == h_full.final_plan.inactive
+    # the resumed journal is complete and parseable again
+    lines = [json.loads(ln) for ln in open(jp)]
+    assert [d.get("epoch") for d in lines[1:]] == [0, 1, 2, 3]
+
+
+def test_journal_spec_mismatch_restarts(tmp_path):
+    from repro.dist import cosim
+    from repro.netsim import topology
+
+    topo = topology.leaf_spine(2, 4, 2, 40e9)
+    jp = str(tmp_path / "campaign.jsonl")
+    cosim.run_cosim(**_journal_spec(topo, jp))
+    head = json.loads(open(jp).readline())
+
+    spec = _journal_spec(topo, jp)
+    spec["seed"] = 99  # different campaign: restart, don't splice
+    h = cosim.run_cosim(**spec)
+    assert h.epochs == 4
+    head2 = json.loads(open(jp).readline())
+    assert head2["spec"]["seed"] == 99 != head["spec"]["seed"]

@@ -1,0 +1,108 @@
+"""Hypothesis property tests for the chaos-campaign invariants (ISSUE 6):
+
+  * phi-expiry hysteresis: under ANY report sequence, a LinkHealth with a
+    cooldown quarantines at least as long as the legacy (cooldown 0) one —
+    hysteresis may only extend windows, never release a path the legacy
+    logic would still hold — and with cooldown 0 the two are bit-identical
+    (the legacy-contract pin);
+  * the effective phi never exceeds the cap and never drops below the
+    base, and a clean (post-cooldown) re-report always resets to base;
+  * in-epoch replanning (replan_chunk_paths): never moves an in-flight or
+    healthy chunk, never flips a chunk's ring direction, and lands every
+    migrant on a surviving path whenever one with the right direction
+    exists.
+
+Hypothesis is an optional dependency (not in the CI image) — these skip
+when it is absent; seeded spot checks of the same properties run
+unconditionally in tests/test_faults.py.
+"""
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.dist.collectives import replan_chunk_paths  # noqa: E402
+from repro.dist.elastic import LinkHealth  # noqa: E402
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    reports=st.lists(st.tuples(st.integers(0, 3), st.integers(0, 40)),
+                     max_size=30),
+    phi=st.integers(1, 6),
+    cooldown=st.integers(0, 6),
+    cap_mult=st.integers(0, 10),
+    probe=st.integers(0, 120),
+)
+def test_hysteresis_only_extends_quarantine(reports, phi, cooldown, cap_mult,
+                                            probe):
+    cap = phi * cap_mult  # a cap below phi_steps is rejected at init
+    legacy = LinkHealth(n_paths=4, phi_steps=phi)
+    hyst = LinkHealth(n_paths=4, phi_steps=phi, cooldown_steps=cooldown,
+                      max_phi_steps=cap)
+    for path, step in sorted(reports, key=lambda r: r[1]):
+        legacy.report_slow(path, step)
+        hyst.report_slow(path, step)
+    for p in range(4):
+        base, eff = legacy.phi_of(p), hyst.phi_of(p)
+        assert eff >= base  # hysteresis never shortens a window
+        if cap > 0:
+            assert eff <= max(cap, phi)
+        if cooldown == 0:  # bit-exact legacy: the co-sim release contract
+            assert eff == base
+            assert hyst.expiry(p) == legacy.expiry(p)
+    # quarantine is monotone: any path the legacy logic holds at `probe`,
+    # the hysteresis logic holds too
+    for lq, hq in zip(legacy.inactive(probe), hyst.inactive(probe)):
+        assert hq or not lq
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    phi=st.integers(1, 6),
+    cooldown=st.integers(1, 6),
+    n_flaps=st.integers(1, 6),
+    late=st.integers(7, 50),
+)
+def test_clean_recovery_resets_phi(phi, cooldown, n_flaps, late):
+    h = LinkHealth(n_paths=1, phi_steps=phi, cooldown_steps=cooldown)
+    step = 0
+    h.report_slow(0, step)
+    for _ in range(n_flaps):  # re-report exactly at each expiry: a flapper
+        step = h.expiry(0)
+        h.report_slow(0, step)
+    assert h.phi_of(0) == phi * 2 ** n_flaps
+    # next report lands well after expiry + cooldown: clean recovery
+    h.report_slow(0, h.expiry(0) + cooldown + late)
+    assert h.phi_of(0) == phi
+
+
+@settings(max_examples=80, deadline=None)
+@given(
+    data=st.data(),
+    n_paths=st.integers(1, 6),
+    n_chunks=st.integers(1, 10),
+)
+def test_replan_respects_no_reordering_rules(data, n_paths, n_chunks):
+    dirs = tuple(data.draw(st.sampled_from((1, -1)), label=f"dir{p}")
+                 for p in range(n_paths))
+    inactive = tuple(data.draw(st.booleans(), label=f"dead{p}")
+                     for p in range(n_paths))
+    paths = tuple(data.draw(st.integers(0, n_paths - 1), label=f"path{c}")
+                  for c in range(n_chunks))
+    in_flight = tuple(c for c in range(n_chunks)
+                      if data.draw(st.booleans(), label=f"fly{c}"))
+    out = replan_chunk_paths(paths, dirs, inactive, in_flight=in_flight)
+    assert len(out) == n_chunks
+    survivors_by_dir = {d: [p for p in range(n_paths)
+                            if dirs[p] == d and not inactive[p]]
+                        for d in (1, -1)}
+    for c, (old, new) in enumerate(zip(paths, out)):
+        if c in in_flight or not inactive[old]:
+            assert new == old  # in-flight / healthy chunks never move
+        elif survivors_by_dir[dirs[old]]:
+            assert new in survivors_by_dir[dirs[old]]  # same-direction only
+        else:
+            assert new == old  # no same-direction survivor: stay, degraded
+        assert dirs[new] == dirs[old]  # a direction flip IS a reorder
