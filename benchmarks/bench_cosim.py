@@ -262,3 +262,128 @@ def bench_faults(fast=True):
         salvage=True,
         rows=rows,
     )
+
+
+# ------------------------------------------------------ degraded telemetry
+def _telemetry_scenario(topo, topo_name, *, ring, size_bytes, loss, delay,
+                        staleness_bound=2, blackout=None, blackout_epochs=3,
+                        kill_epoch=2, recover_epoch=6, epochs=10, spine=3,
+                        seed=0, channel_seed=7):
+    """One killed-spine convergence run with the congestion feedback routed
+    through a degraded TelemetryChannel.  ``loss=None`` is the no-channel
+    legacy row (the bit-identity reference the gate pins (0, 0) against)."""
+    from repro.dist import cosim
+    from repro.netsim import faults
+
+    spec = dict(
+        topo=topo, hosts=cosim.ring_hosts(topo, ring), size_bytes=size_bytes,
+        scheme="ecmp", epochs=epochs, phi_steps=2, n_chunks=4, seed=seed,
+        faults=(cosim.kill_spine(topo, spine, epoch=kill_epoch,
+                                 recover_epoch=recover_epoch),),
+    )
+    if loss is not None:
+        spec.update(
+            telemetry=faults.TelemetryChannel(
+                loss=loss, delay_epochs=delay, seed=channel_seed,
+                blackout=blackout),
+            staleness_bound=staleness_bound,
+            blackout_epochs=blackout_epochs)
+    labels = dict(topo=topo_name, scheme="ecmp", ring=ring, spine=spine,
+                  kill_epoch=kill_epoch, recover_epoch=recover_epoch,
+                  seed=seed, loss=loss, delay=delay,
+                  staleness_bound=staleness_bound if loss is not None
+                  else None,
+                  blackout=list(blackout) if blackout else None)
+    return spec, labels
+
+
+def _telemetry_row(hist, labels, wall_s):
+    row = _row(hist, labels, wall_s)
+    vs = row["plan_version"]
+    row["version_monotone"] = bool(
+        all(b > a for a, b in zip(vs, vs[1:])))
+    row["plan_refused"] = int(hist.plan_refused)
+    row["safe_epochs"] = [r.epoch for r in hist.records if r.safe_mode]
+    row["dropped_reports"] = int(sum(
+        max(r.reports_sent, 0) - max(r.reports_delivered, 0)
+        for r in hist.records))
+    return row
+
+
+def bench_telemetry(fast=True):
+    """ISSUE 7 acceptance: the control plane survives its own degradation.
+
+      * three_tier killed-agg acceptance cells — no channel (the legacy
+        reference), perfect channel (gate: p99 curves bit-identical to no
+        channel), lossless 2-epoch delay, and 30 % loss + 2-epoch delay
+        (gate: reconverges within +1 epoch of the lossless same-delay
+        baseline, plan versions strictly monotone, zero refused newer
+        plans);
+      * a full telemetry BLACKOUT cell — the watchdog must flip the run
+        into safe mode (no steering on stale state) and the run must
+        reconverge after the channel heals (both gated);
+      * the loss {0, 0.1, 0.3, 0.5} x delay {0, 1, 2} grid on the 2-tier
+        fabric: convergence vs channel degradation curves (loss <= 0.3
+        cells gated at lossless-same-delay + 1).
+    """
+    from repro.dist import cosim
+    from repro.netsim import sweep, topology
+
+    rows = []
+
+    # ---- three_tier acceptance cells (one compile, shared by the pool)
+    topo3 = topology.three_tier()  # 320 hosts, 320 paths
+    cells = [
+        ("none", dict(loss=None, delay=0)),
+        ("perfect", dict(loss=0.0, delay=0)),
+        ("delay2", dict(loss=0.0, delay=2)),
+        ("loss30_delay2", dict(loss=0.3, delay=2)),
+        ("blackout", dict(loss=0.0, delay=0, blackout=(0, 5),
+                          blackout_epochs=2, recover_epoch=8, epochs=12)),
+    ]
+    jobs, job_labels, names = [], [], []
+    for name, kw in cells:
+        spec, labels = _telemetry_scenario(topo3, "three_tier_320", ring=20,
+                                           size_bytes=16e6, **kw)
+        jobs.append(spec)
+        job_labels.append(labels)
+        names.append(name)
+    t0 = time.time()
+    hists = cosim.run_cosim_grid(jobs)
+    wall = time.time() - t0
+    for name, hist, labels in zip(names, hists, job_labels):
+        row = _telemetry_row(hist, labels, wall / len(jobs))
+        row["cell"] = name
+        rows.append(row)
+        emit(f"telemetry_three_tier320_{name}", wall / len(jobs) * 1e6,
+             f"conv_epochs_{row['convergence_epochs']}_safe_"
+             f"{len(row['safe_epochs'])}_refused_{row['plan_refused']}")
+
+    # ---- loss x delay grid on the 2-tier fabric
+    topo2 = topology.leaf_spine(8, 12, 16, 100e9)
+    losses = (0.0, 0.1, 0.3, 0.5)
+    delays = (0, 1, 2)
+    jobs, job_labels = [], []
+    for loss in losses:
+        for delay in delays:
+            spec, labels = _telemetry_scenario(
+                topo2, "leaf_spine_128", ring=8, size_bytes=8e6,
+                loss=loss, delay=delay)
+            jobs.append(spec)
+            job_labels.append(labels)
+    t0 = time.time()
+    hists = cosim.run_cosim_grid(jobs)
+    grid_wall = time.time() - t0
+    for hist, labels in zip(hists, job_labels):
+        row = _telemetry_row(hist, labels, grid_wall / len(jobs))
+        row["cell"] = f"grid_l{labels['loss']}_d{labels['delay']}"
+        rows.append(row)
+        emit(f"telemetry_grid_l{int(labels['loss'] * 100)}_d{labels['delay']}",
+             grid_wall / len(jobs) * 1e6,
+             f"conv_epochs_{row['convergence_epochs']}")
+
+    PERF["telemetry"] = dict(
+        sweep_config=dict(devices=sweep.sweep_devices(),
+                          batch_mode=sweep.batch_mode()),
+        rows=rows,
+    )

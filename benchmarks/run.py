@@ -28,11 +28,13 @@ def main() -> None:
 
     from benchmarks import common, paper_benches
     from benchmarks.bench_collectives import bench_collectives
-    from benchmarks.bench_cosim import bench_cosim, bench_faults
+    from benchmarks.bench_cosim import bench_cosim, bench_faults, \
+        bench_telemetry
     from benchmarks.bench_kernels import bench_kernels
 
     benches = list(paper_benches.ALL) + [bench_collectives, bench_kernels,
-                                         bench_cosim, bench_faults]
+                                         bench_cosim, bench_faults,
+                                         bench_telemetry]
     if args.profile:
         benches.append(paper_benches.bench_profile_phases)
     print("name,us_per_call,derived")

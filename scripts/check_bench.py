@@ -121,6 +121,139 @@ def check_faults(new: dict | None, base: dict | None,
     return 0 if ok else 1
 
 
+def check_telemetry(new: dict | None, base: dict | None) -> int:
+    """Degraded-telemetry gate (BENCH_netsim.json["telemetry"]), the ISSUE 7
+    acceptance criteria as checks WITHIN the fresh run:
+
+      * every row: plan versions strictly monotone across the run and zero
+        refused newer-plan applications (the versioned-application
+        invariant held live);
+      * the perfect-channel three_tier cell is bit-identical to the
+        no-channel cell (p99 curves equal element-wise);
+      * the loss30_delay2 three_tier cell — 30 % report loss, 2-epoch
+        delay, killed agg switch — reconverges within +1 epoch of the
+        LOSSLESS SAME-DELAY baseline (delay2 cell); the delay-only penalty
+        itself is bounded by the delay;
+      * the blackout cell entered safe mode, exited it after the channel
+        healed, and reconverged;
+      * grid cells with loss <= 0.3 all converge, each within +1 epoch of
+        the lossless cell at the same delay;
+
+    plus the cross-run regression check: any cell's convergence-epoch
+    count may not regress by more than 1 vs the committed baseline."""
+    if not new or not new.get("rows"):
+        print("FAIL: new record has no telemetry rows "
+              "(did --only telemetry run?)")
+        return 1
+    ok = True
+    rows = {r.get("cell"): r for r in new["rows"]}
+
+    for r in new["rows"]:
+        name = r.get("cell", "?")
+        if not r.get("version_monotone", False):
+            ok = False
+            print(f"FAIL: {name} plan versions not strictly monotone")
+        refused = r.get("plan_refused", 0)
+        if refused:
+            ok = False
+            print(f"FAIL: {name} refused {refused} genuinely newer plans")
+    print(f"OK: plan versions monotone, 0 refusals across {len(new['rows'])} "
+          "rows" if ok else "    (version/refusal failures above)")
+
+    def conv(cell):
+        r = rows.get(cell)
+        return None if r is None else r.get("convergence_epochs")
+
+    # perfect channel == no channel, bit for bit
+    if rows.get("none") and rows.get("perfect"):
+        same = rows["none"]["p99_us"] == rows["perfect"]["p99_us"]
+        verdict = "OK" if same else "FAIL"
+        ok &= same
+        print(f"{verdict}: perfect-channel p99 curve bit-identical to "
+              "no-channel")
+    else:
+        ok = False
+        print("FAIL: missing none/perfect acceptance cells")
+
+    # lossy-delayed reconvergence vs the lossless same-delay baseline
+    c_delay, c_lossy = conv("delay2"), conv("loss30_delay2")
+    if c_delay is None or c_lossy is None:
+        ok = False
+        print(f"FAIL: acceptance cells did not converge "
+              f"(delay2={c_delay}, loss30_delay2={c_lossy})")
+    else:
+        good = c_lossy <= c_delay + 1
+        verdict = "OK" if good else "FAIL"
+        ok &= good
+        print(f"{verdict}: loss30_delay2 conv {c_lossy} vs lossless "
+              f"same-delay {c_delay} (limit +1)")
+        c0 = conv("perfect")
+        if c0 is not None:
+            good = c_delay <= c0 + 2  # a 2-epoch report delay may cost 2
+            verdict = "OK" if good else "FAIL"
+            ok &= good
+            print(f"{verdict}: delay2 conv {c_delay} vs perfect {c0} "
+                  f"(limit +delay)")
+
+    # blackout: safe mode entered, exited, reconverged
+    b = rows.get("blackout")
+    if b is None:
+        ok = False
+        print("FAIL: missing blackout acceptance cell")
+    else:
+        safe = b.get("safe_epochs", [])
+        entered = len(safe) > 0
+        exited = bool(safe) and max(safe) < b["epochs"] - 1 \
+            and not b["safe_mode"][-1]
+        reconv = b.get("convergence_epochs") is not None
+        good = entered and exited and reconv
+        verdict = "OK" if good else "FAIL"
+        ok &= good
+        print(f"{verdict}: blackout safe_epochs {safe} "
+              f"(entered {entered}, exited {exited}, "
+              f"conv {b.get('convergence_epochs')})")
+
+    # the loss x delay grid: bounded degradation wherever loss <= 0.3
+    lossless = {}
+    for r in new["rows"]:
+        if str(r.get("cell", "")).startswith("grid_") and r["loss"] == 0.0:
+            lossless[r["delay"]] = r.get("convergence_epochs")
+    for r in new["rows"]:
+        if not str(r.get("cell", "")).startswith("grid_"):
+            continue
+        if r["loss"] > 0.3:
+            continue  # 50 % loss is reported, not gated
+        c, ref = r.get("convergence_epochs"), lossless.get(r["delay"])
+        name = r["cell"]
+        if c is None or ref is None:
+            ok = False
+            print(f"FAIL: {name} did not converge (conv {c}, lossless "
+                  f"same-delay {ref})")
+            continue
+        good = c <= ref + 1
+        verdict = "OK" if good else "FAIL"
+        ok &= good
+        print(f"{verdict}: {name} conv {c} (lossless d={r['delay']}: {ref}, "
+              "limit +1)")
+
+    # cross-run: convergence may not regress > 1 vs the committed baseline
+    base_rows = {r.get("cell"): r for r in (base or {}).get("rows", [])}
+    if not base_rows:
+        print("WARN: baseline has no telemetry rows; in-run gates only")
+    for r in new["rows"]:
+        b = base_rows.get(r.get("cell"))
+        if b is None or b.get("convergence_epochs") is None:
+            continue
+        c = r.get("convergence_epochs")
+        limit = b["convergence_epochs"] + 1
+        good = c is not None and c <= limit
+        ok &= good
+        if not good:
+            print(f"FAIL: {r['cell']} convergence_epochs {c} regressed "
+                  f"(baseline {b['convergence_epochs']}, limit {limit})")
+    return 0 if ok else 1
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("new", help="fresh bench JSON (the run under test)")
@@ -136,7 +269,19 @@ def main() -> int:
                     help="gate the chaos-campaign rows (crashed cells, "
                          "reconvergence, worst censored p99) instead of "
                          "the fig12 sweep")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="gate the degraded-telemetry rows (perfect-channel "
+                         "bit-identity, lossy/delayed reconvergence, plan-"
+                         "version monotonicity, blackout safe-mode) instead "
+                         "of the fig12 sweep")
     args = ap.parse_args()
+
+    if args.telemetry:
+        with open(args.new) as f:
+            new_t = json.load(f).get("telemetry")
+        with open(args.baseline) as f:
+            base_t = json.load(f).get("telemetry")
+        return check_telemetry(new_t, base_t)
 
     if args.cosim:
         with open(args.new) as f:

@@ -84,3 +84,48 @@ if [ -z "${REPRO_CI_SKIP_BENCH_GATE:-}" ]; then
   python scripts/check_bench.py /tmp/BENCH_faults.json BENCH_netsim.json \
     --faults
 fi
+
+# degraded-telemetry smoke on the forced 8-device platform: the same
+# killed-spine scenario with its congestion reports pushed through a
+# seeded 30%-loss / 1-epoch-delay / duplicating channel — the planner
+# must still quarantine the dead paths and reconverge, plan versions must
+# stay strictly monotone (a replayed older plan is refused, never
+# applied), and a full blackout must trip the safe-mode fallback and
+# recover once the channel heals.
+XLA_FLAGS="--xla_force_host_platform_device_count=8" python - <<'EOF2'
+from repro.dist import cosim
+from repro.netsim import faults, topology
+
+topo = topology.leaf_spine(4, 4, 4, 100e9)
+hosts = cosim.ring_hosts(topo, 8)
+kw = dict(scheme="ecmp", epochs=8, phi_steps=2, n_chunks=4, seed=0,
+          faults=(cosim.kill_spine(topo, 2, epoch=1, recover_epoch=5),))
+h = cosim.run_cosim(topo, hosts, 4e6, staleness_bound=2,
+                    telemetry=faults.TelemetryChannel(
+                        loss=0.3, delay_epochs=1, dup=0.2, seed=7), **kw)
+conv = h.convergence_epoch(1)
+assert conv is not None, "lossy telemetry: no reconvergence"
+vs = [r.plan_version for r in h.records]
+assert all(b > a for a, b in zip(vs, vs[1:])), f"non-monotone plans: {vs}"
+assert h.plan_refused == 0, f"{h.plan_refused} newer plans refused"
+assert any(r.reported_slow for r in h.records), "no reports admitted"
+print(f"telemetry smoke: lossy channel reconverged at epoch {conv}, "
+      f"plan versions monotone, 0 refusals")
+hb = cosim.run_cosim(topo, hosts, 4e6, blackout_epochs=2,
+                     telemetry=faults.TelemetryChannel(blackout=(0, 4),
+                                                       seed=1), **kw)
+safe = [r.epoch for r in hb.records if r.safe_mode]
+assert safe, "blackout never tripped safe mode"
+assert not hb.records[-1].safe_mode, "never recovered from safe mode"
+print(f"telemetry smoke: blackout safe-mode epochs {safe}, recovered")
+EOF2
+
+# degraded-telemetry gate: rerun the telemetry bench and fail on a broken
+# perfect-channel bit-identity, unbounded lossy/delayed reconvergence,
+# non-monotone plan versions, a blackout that misses safe mode, or a >1
+# convergence-epoch regression vs the committed record.
+if [ -z "${REPRO_CI_SKIP_BENCH_GATE:-}" ]; then
+  python -m benchmarks.run --only telemetry --json /tmp/BENCH_telemetry.json
+  python scripts/check_bench.py /tmp/BENCH_telemetry.json BENCH_netsim.json \
+    --telemetry
+fi

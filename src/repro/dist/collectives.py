@@ -34,12 +34,21 @@ class PathPlan:
     The plan is a *static* (hashable) argument: a new plan means a new
     compile, which is the point — path changes happen between steps, never
     inside one (no reordering).
+
+    ``version`` is the plan's monotonic generation number (the planning
+    epoch that produced it).  Plans travel from the planner to the QPs over
+    the same imperfect control plane as the congestion reports, so a
+    delivery can arrive late or twice; ``apply_plan`` refuses any candidate
+    whose version does not EXCEED the plan currently applied — a reordered
+    or duplicated delivery can never regress a QP to an older path table,
+    which would silently move in-flight chunks (a reorder).
     """
 
     n_chunks: int = 4
     directions: tuple[int, ...] = (1, -1)
     inactive: tuple[bool, ...] | None = None
     wire_dtype: str = "float32"
+    version: int = 0
 
     def __post_init__(self):
         assert self.n_chunks >= 1
@@ -80,6 +89,7 @@ class PinnedPlan:
     inactive: tuple[bool, ...]
     paths: tuple[int, ...]  # chunk c -> path paths[c]
     wire_dtype: str = "float32"
+    version: int = 0
 
     def __post_init__(self):
         assert len(self.paths) == self.n_chunks, (self.paths, self.n_chunks)
@@ -92,6 +102,22 @@ class PinnedPlan:
 
     def chunk_paths(self) -> tuple[int, ...]:
         return tuple(self.paths)
+
+
+def apply_plan(current, candidate) -> tuple[object, bool]:
+    """Versioned plan application: the no-reordering rule ACROSS plans.
+
+    Returns ``(applied, took_candidate)``.  The candidate replaces the
+    current plan only when its ``version`` strictly exceeds the applied
+    one; a stale (reordered) or repeated (duplicated) delivery is refused
+    and the current table stays in force.  Applying an OLDER table would
+    retroactively move chunks whose packets are already committed to the
+    newer table's paths — the cross-version spelling of "placed sub-flows
+    never move".  Refusal is idempotence, not an error: the caller counts
+    refusals (``dist.cosim`` records them) but keeps running."""
+    if candidate.version <= current.version:
+        return current, False
+    return candidate, True
 
 
 def replan_chunk_paths(paths: tuple[int, ...], directions: tuple[int, ...],

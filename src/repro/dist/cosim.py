@@ -132,6 +132,14 @@ class EpochRecord:
     replan_round: int = -1  # in-epoch replanning cut round (-1 = none)
     straggler_scale: float = 1.0  # cadence stretch the ring actually paid
     straggler_quarantined: tuple[int, ...] = ()  # ranks the policy benched
+    # --- degraded-telemetry observables (-1 / False = no channel in play)
+    safe_mode: bool = False  # epoch RAN on the blind ECMP fallback
+    plan_version: int = -1  # version of the plan in force this epoch
+    reports_sent: int = -1  # telemetry payloads emitted this epoch
+    reports_delivered: int = -1  # payloads the channel delivered this epoch
+    reports_admitted: int = -1  # deliveries admitted by the staleness gate
+    reports_stale: int = -1  # deliveries older than the staleness bound
+    reports_duplicate: int = -1  # duplicated deliveries (idempotently dropped)
 
 
 @dataclasses.dataclass
@@ -146,6 +154,7 @@ class CosimHistory:
     plans: list  # PathPlan used in epoch t (len == epochs)
     final_plan: object  # plan for epoch `epochs` (what a deployment ships)
     health: LinkHealth
+    plan_refused: int = 0  # newer-plan applications refused (gate: zero)
 
     @property
     def epochs(self) -> int:
@@ -205,6 +214,13 @@ class CosimHistory:
             replan_round=[r.replan_round for r in rs],
             straggler_scale=[round(r.straggler_scale, 3) for r in rs],
             n_straggler_quarantined=[len(r.straggler_quarantined) for r in rs],
+            safe_mode=[bool(r.safe_mode) for r in rs],
+            plan_version=[r.plan_version for r in rs],
+            reports_sent=[r.reports_sent for r in rs],
+            reports_delivered=[r.reports_delivered for r in rs],
+            reports_admitted=[r.reports_admitted for r in rs],
+            reports_stale=[r.reports_stale for r in rs],
+            reports_duplicate=[r.reports_duplicate for r in rs],
         )
 
     def summary_lines(self) -> list[str]:
@@ -217,6 +233,18 @@ class CosimHistory:
 
 
 # ----------------------------------------------------------- epoch journal
+JOURNAL_SCHEMA_VERSION = 2
+
+
+class JournalSchemaError(RuntimeError):
+    """A cosim journal written by an incompatible driver version.  Raised
+    (never silently restarted over) because a schema mismatch means the
+    journal may hold epochs this driver would MISPARSE — the user must
+    delete or migrate the file explicitly.  A *spec* mismatch (same schema,
+    different campaign) still restarts silently: that is a different run,
+    not a different format."""
+
+
 def _rec_to_json(r: EpochRecord) -> dict:
     d = dataclasses.asdict(r)
     d["fct"] = np.asarray(r.fct, np.float32).tolist()
@@ -238,10 +266,12 @@ def _rec_from_json(d: dict) -> EpochRecord:
 def _load_journal(journal: str, spec_key: dict):
     """Parse a campaign journal.  Returns (records, epoch_states) for a
     journal whose header matches ``spec_key``; None for a missing,
-    mismatched (different campaign — restart, don't splice), or corrupt
-    file.  ``epoch_states`` are the per-epoch (plan_inactive, health,
-    straggler) snapshots; the LAST one is the exact driver state to resume
-    from."""
+    spec-mismatched (different campaign — restart, don't splice), or
+    corrupt file; raises ``JournalSchemaError`` for a cosim journal whose
+    ``schema_version`` this driver does not speak (resuming over it could
+    misparse epochs).  ``epoch_states`` are the per-epoch (plan_inactive,
+    health, straggler, telemetry, watchdog) snapshots; the LAST one is the
+    exact driver state to resume from."""
     import json
     import os
 
@@ -258,8 +288,17 @@ def _load_journal(journal: str, spec_key: dict):
         head = json.loads(raw[0])
     except ValueError:
         return None
-    if not isinstance(head, dict) or head.get("journal") != "cosim" \
-            or head.get("spec") != spec_key:
+    if not isinstance(head, dict) or head.get("journal") != "cosim":
+        return None
+    schema = head.get("schema_version", head.get("version"))
+    if schema != JOURNAL_SCHEMA_VERSION:
+        raise JournalSchemaError(
+            f"cosim journal {journal!r} has schema_version={schema!r} but "
+            f"this driver writes schema_version={JOURNAL_SCHEMA_VERSION}; "
+            "refusing to resume over an incompatible format — delete the "
+            "journal (restarts the campaign) or replay it with the driver "
+            "version that wrote it")
+    if head.get("spec") != spec_key:
         return None
     records, states = [], []
     for ln in raw[1:]:
@@ -300,6 +339,9 @@ def run_cosim(
     window_slots: int | None = None,
     imbalance_sample_every: int = 10,
     journal: str | None = None,
+    telemetry=None,
+    staleness_bound: int | None = None,
+    blackout_epochs: int = 3,
     **cfg_kw,
 ) -> CosimHistory:
     """Run ``epochs`` plan -> sim -> health cycles over a fault schedule.
@@ -342,8 +384,31 @@ def run_cosim(
       * ``journal`` (a file path) appends one JSON line per completed
         epoch; re-running with the same spec resumes after the last
         journaled epoch instead of restarting the campaign (exact driver
-        state — records, health phi windows, straggler misses — restores
-        from the journal tail; a spec mismatch restarts from scratch).
+        state — records, health phi windows, straggler misses, telemetry
+        queue, watchdog — restores from the journal tail; a spec mismatch
+        restarts from scratch, a ``schema_version`` mismatch raises
+        ``JournalSchemaError``).
+
+    Degraded-telemetry extensions (``telemetry`` is a
+    ``netsim.faults.TelemetryChannel``; ``telemetry=None`` is bit-identical
+    to the legacy perfect-feedback driver):
+
+      * every slow path ``netfeed.observe_congestion`` sees is SENT through
+        the channel as an epoch-stamped ``("slow", path)`` report — plus
+        one ``("hb", leaf)`` liveness heartbeat per leaf — and only what
+        the channel delivers reaches the planner, admitted through
+        ``LinkHealth.admit_report`` against ``staleness_bound`` (stale
+        reports discarded, duplicated deliveries idempotent);
+      * plans apply through ``collectives.apply_plan``: versions are
+        strictly monotone across epochs, a replayed older plan is refused
+        (asserted every epoch), and unexpected refusals of genuinely newer
+        plans are counted (the bench gates on zero);
+      * a ``dist.elastic.TelemetryWatchdog`` watches admissible deliveries:
+        ``blackout_epochs`` silent epochs flip the driver into SAFE MODE —
+        the epoch runs an all-paths-active plan with steering OFF (plain
+        ECMP five-tuple hashing; same trace shapes, so the compiled
+        program is reused) instead of steering on stale quarantines — and
+        one admissible delivery after the channel heals flips it back.
     """
     from repro.dist import collectives
     from repro.netsim import metrics, sweep, workloads
@@ -353,9 +418,16 @@ def run_cosim(
     n = len(hosts)
     if health is None:
         health = LinkHealth(n_paths=topo.n_paths, phi_steps=phi_steps,
-                            cooldown_steps=cooldown_steps)
+                            cooldown_steps=cooldown_steps,
+                            max_staleness_epochs=staleness_bound)
     else:
         phi_steps = health.phi_steps
+
+    watchdog = None
+    if telemetry is not None:
+        from repro.dist.elastic import TelemetryWatchdog
+
+        watchdog = TelemetryWatchdog(blackout_epochs=blackout_epochs)
 
     cap0 = np.asarray(topo.capacity)
     fabric_bw = float(np.median(cap0[np.asarray(topo.uplink_ids)]))
@@ -387,6 +459,9 @@ def run_cosim(
         cooldown_steps=cooldown_steps, n_chunks=n_chunks, seed=seed,
         steer=bool(steer), replan=bool(replan),
         topo=dict(kind=topo.kind, n_links=topo.n_links, n_paths=topo.n_paths),
+        telemetry=None if telemetry is None else telemetry.config(),
+        staleness_bound=staleness_bound,
+        blackout_epochs=blackout_epochs if telemetry is not None else None,
     )
     journal_fh = None
     if journal is not None:
@@ -400,24 +475,43 @@ def run_cosim(
                 health.restore(states[-1]["health"])
                 if policy is not None and states[-1].get("straggler"):
                     policy.restore(states[-1]["straggler"])
+                if telemetry is not None and states[-1].get("telemetry"):
+                    telemetry.restore(states[-1]["telemetry"])
+                if watchdog is not None and states[-1].get("watchdog"):
+                    watchdog.restore(states[-1]["watchdog"])
             for st in states:
                 plans.append(collectives.PathPlan(
                     n_chunks=n_chunks, directions=tuple(health.directions),
                     inactive=tuple(bool(b) for b in st["plan_inactive"]),
-                    wire_dtype=wire_dtype))
+                    wire_dtype=wire_dtype,
+                    version=int(st["record"].get("plan_version", 0))))
         # (re)write header + the valid prefix: drops any torn tail line
         # left by the interruption so the resumed journal stays parseable
         journal_fh = open(journal, "w")
-        journal_fh.write(json.dumps(
-            dict(journal="cosim", version=1, spec=spec_key)) + "\n")
+        journal_fh.write(json.dumps(dict(
+            journal="cosim", schema_version=JOURNAL_SCHEMA_VERSION,
+            spec=spec_key)) + "\n")
         for st in (loaded[1] if loaded is not None else ()):
             journal_fh.write(json.dumps(st) + "\n")
         journal_fh.flush()
 
     plan = health.plan(start_epoch, n_chunks=n_chunks, wire_dtype=wire_dtype)
+    plan_refused = 0
     W = window_slots
     try:
         for epoch in range(start_epoch, epochs):
+            # ------------------------------------- safe-mode plan selection
+            # entering state of the watchdog decides THIS epoch's conduct:
+            # blind planners don't steer — run everything-active, unsteered
+            in_safe = watchdog is not None and watchdog.safe_mode
+            if in_safe:
+                run_plan = collectives.PathPlan(
+                    n_chunks=n_chunks, directions=tuple(health.directions),
+                    inactive=None, wire_dtype=wire_dtype,
+                    version=plan.version)
+            else:
+                run_plan = plan
+
             # -------------------------------------------- fault state
             if campaign is not None:
                 cap = campaign.capacity_schedule(topo, epoch)  # [K, nl+1]
@@ -446,10 +540,11 @@ def run_cosim(
             gap_e = gap * eff  # slowest non-quarantined rank gates the ring
 
             # ------------------------------- trace (+ in-epoch replanning)
-            steer_p = topo.n_paths if steer else None
+            steer_p = topo.n_paths if steer and not in_safe else None
             onset = campaign.midepoch_onset(topo, epoch) if campaign else None
             replan_round = -1
-            if onset is not None and replan and steer and onset.paths:
+            if onset is not None and replan and steer and not in_safe \
+                    and onset.paths:
                 t_detect = onset.frac * duration_s + (
                     detect_delay_s if detect_delay_s is not None else 2 * gap_e)
                 r_cut = int(math.ceil(t_detect / gap_e))
@@ -497,7 +592,7 @@ def run_cosim(
                 trace = workloads.merge_traces(tr_a, tr_b)
             else:
                 trace = workloads.collective_trace(
-                    plan, hosts, size_bytes, link_bw=fabric_bw,
+                    run_plan, hosts, size_bytes, link_bw=fabric_bw,
                     round_gap_s=gap_e, seed=seed, steer_paths=steer_p)
             if W is None:
                 W = int(trace.valid.sum())  # spill-proof: one slot per flow
@@ -508,13 +603,63 @@ def run_cosim(
                                          loss=loss, cap_seg_steps=cap_seg,
                                          window_slots=W)
             new_builds = sweep.cache_stats()["builds"] - b0
-            slow = netfeed.report_congestion(
-                health, topo, outs, step=epoch, overload=overload,
-                capacity=cap_report, loss=loss)
+
+            # ------------------------------------ congestion feedback path
+            n_sent = n_delivered = n_admitted = n_stale = n_dup = -1
+            if telemetry is None:
+                # perfect channel: the legacy direct path, bit-identical
+                slow = netfeed.report_congestion(
+                    health, topo, outs, step=epoch, overload=overload,
+                    capacity=cap_report, loss=loss)
+            else:
+                observed = netfeed.observe_congestion(
+                    topo, outs, overload=overload, capacity=cap_report,
+                    loss=loss)
+                for p in observed:
+                    telemetry.send(("slow", int(p)), epoch)
+                for leaf in range(topo.n_leaf):  # liveness heartbeats
+                    telemetry.send(("hb", int(leaf)), epoch)
+                n_sent = len(observed) + topo.n_leaf
+                batch = telemetry.deliver(epoch)
+                n_delivered = len(batch)
+                n_admitted = n_stale = n_dup = 0
+                admitted_slow: list[int] = []
+                for payload, origin in batch:
+                    if payload[0] == "slow":
+                        verdict = health.admit_report(
+                            int(payload[1]), origin, epoch)
+                        if verdict == "admitted":
+                            n_admitted += 1
+                            admitted_slow.append(int(payload[1]))
+                        elif verdict == "stale":
+                            n_stale += 1
+                        else:
+                            n_dup += 1
+                    else:  # heartbeat: same staleness gate, no health state
+                        if staleness_bound is not None \
+                                and epoch - origin > staleness_bound:
+                            n_stale += 1
+                        else:
+                            n_admitted += 1
+                watchdog.observe(n_admitted)
+                slow = tuple(dict.fromkeys(admitted_slow))
+
+            # ------------------------------------ versioned plan application
             next_plan = health.plan(epoch + 1, n_chunks=n_chunks,
                                     wire_dtype=wire_dtype)
+            applied, took = collectives.apply_plan(plan, next_plan)
+            if not took:
+                plan_refused += 1  # a genuinely newer plan was refused: bug
+            # the cross-version no-reordering invariant, asserted live: a
+            # reordered (older) or duplicated delivery must be refused and
+            # leave the applied table untouched
+            stale_applied, took_stale = collectives.apply_plan(applied, plan)
+            assert stale_applied is applied and not took_stale, \
+                (applied.version, plan.version)
+            dup_applied, took_dup = collectives.apply_plan(applied, applied)
+            assert dup_applied is applied and not took_dup
             churn = sum(int(a != b)
-                        for a, b in zip(plan.inactive, next_plan.inactive))
+                        for a, b in zip(plan.inactive, applied.inactive))
             fct, completion = metrics.fct_samples(result, trace,
                                                   horizon_s=duration_s)
             imb = metrics.throughput_imbalance(
@@ -528,7 +673,8 @@ def run_cosim(
                 completion=completion,
                 imbalance_mean=float(imb.mean()) if imb.size else 0.0,
                 plan_churn=churn,
-                quarantined=tuple(p for p, d in enumerate(plan.inactive) if d),
+                quarantined=tuple(
+                    p for p, d in enumerate(run_plan.inactive) if d),
                 reported_slow=tuple(slow),
                 spill_steps=int(result.spill_steps),
                 new_builds=new_builds,
@@ -537,27 +683,39 @@ def run_cosim(
                 replan_round=replan_round,
                 straggler_scale=float(eff),
                 straggler_quarantined=strag_quar,
+                safe_mode=in_safe,
+                plan_version=int(plan.version),
+                reports_sent=n_sent,
+                reports_delivered=n_delivered,
+                reports_admitted=n_admitted,
+                reports_stale=n_stale,
+                reports_duplicate=n_dup,
             )
             records.append(rec)
-            plans.append(plan)
+            plans.append(run_plan)
             if journal_fh is not None:
                 import json
 
                 journal_fh.write(json.dumps(dict(
                     epoch=epoch,
                     record=_rec_to_json(rec),
-                    plan_inactive=[bool(b) for b in plan.inactive],
+                    plan_inactive=[bool(b) for b in run_plan.inactive],
                     health=health.state(),
                     straggler=policy.state() if policy is not None else None,
+                    telemetry=telemetry.state()
+                    if telemetry is not None else None,
+                    watchdog=watchdog.state()
+                    if watchdog is not None else None,
                 )) + "\n")
                 journal_fh.flush()
-            plan = next_plan
+            plan = applied
     finally:
         if journal_fh is not None:
             journal_fh.close()
     return CosimHistory(scheme=scheme, phi_steps=phi_steps,
                         duration_s=duration_s, records=records, plans=plans,
-                        final_plan=plan, health=health)
+                        final_plan=plan, health=health,
+                        plan_refused=plan_refused)
 
 
 def run_cosim_grid(specs: list[dict], *, workers: int | None = None,

@@ -39,13 +39,23 @@ class LinkHealth:
     report well after the cooldown) resets to the base ``phi_steps``.  The
     default ``cooldown_steps=0`` is bit-exact legacy behavior — the co-sim
     release-epoch contract (``expiry == last_report + phi_steps``) keys on
-    it."""
+    it.
+
+    Degraded-telemetry admission (``admit_report``): reports arriving over
+    a lossy/delayed feedback channel are EPOCH-STAMPED at the observer and
+    admitted against ``max_staleness_epochs`` — a report older than the
+    bound is discarded (acting on ancient congestion state is how a
+    balancer herds traffic onto a path that healed long ago), and a
+    duplicated delivery of the same (path, origin) report is idempotent.
+    ``max_staleness_epochs=None`` (the default) admits any age — the
+    legacy perfect-channel contract."""
 
     n_paths: int
     phi_steps: int = 16
     directions: tuple[int, ...] | None = None
     cooldown_steps: int = 0
     max_phi_steps: int = 0  # 0 = uncapped
+    max_staleness_epochs: int | None = None
 
     def __post_init__(self):
         assert self.n_paths >= 1 and self.phi_steps >= 1
@@ -53,11 +63,14 @@ class LinkHealth:
         # a cap below the base window would let hysteresis SHORTEN
         # quarantines — the opposite of its contract
         assert self.max_phi_steps == 0 or self.max_phi_steps >= self.phi_steps
+        assert self.max_staleness_epochs is None \
+            or self.max_staleness_epochs >= 0
         if self.directions is None:
             self.directions = alternating_directions(self.n_paths)
         assert len(self.directions) == self.n_paths
         self._last_report: dict[int, int] = {}
         self._phi: dict[int, int] = {}  # per-path effective phi (hysteresis)
+        self._seen: set[tuple[int, int]] = set()  # (path, origin) dedup
 
     def phi_of(self, path: int) -> int:
         """Effective phi window for ``path`` (== ``phi_steps`` unless
@@ -80,6 +93,35 @@ class LinkHealth:
                 self._phi[path] = self.phi_steps  # clean recovery: reset
         self._last_report[path] = step if prev is None else max(prev, step)
 
+    def admit_report(self, path: int, origin_epoch: int,
+                     now_epoch: int) -> str:
+        """Staleness-bounded, idempotent admission of one epoch-stamped
+        report delivered at ``now_epoch`` about congestion OBSERVED at
+        ``origin_epoch``.  Returns the verdict:
+
+          * ``"stale"``     — older than ``max_staleness_epochs``; the
+            report is discarded, no state changes (steering on it would
+            chase a hotspot that may no longer exist);
+          * ``"duplicate"`` — this exact (path, origin) report was already
+            admitted; discarded, no state changes (a duplicated delivery
+            must not refresh the phi window or trip flap hysteresis);
+          * ``"admitted"``  — quarantine refreshes from the DELIVERY epoch
+            (the staleness bound caps how far behind reality that is).
+
+        Out-of-order deliveries are safe by construction: ``report_slow``
+        keeps the max last-report step, so an older report arriving after
+        a newer one can never shorten a window."""
+        assert 0 <= origin_epoch <= now_epoch, (origin_epoch, now_epoch)
+        if self.max_staleness_epochs is not None \
+                and now_epoch - origin_epoch > self.max_staleness_epochs:
+            return "stale"
+        key = (path, origin_epoch)
+        if key in self._seen:
+            return "duplicate"
+        self._seen.add(key)
+        self.report_slow(path, now_epoch)
+        return "admitted"
+
     def inactive(self, step: int) -> tuple[bool, ...]:
         return tuple(
             self._last_report.get(p) is not None
@@ -101,22 +143,83 @@ class LinkHealth:
         return dict(
             last_report={str(k): v for k, v in self._last_report.items()},
             phi={str(k): v for k, v in self._phi.items()},
+            seen=sorted(list(k) for k in self._seen),
         )
 
     def restore(self, state: dict) -> None:
         self._last_report = {int(k): int(v)
                              for k, v in state.get("last_report", {}).items()}
         self._phi = {int(k): int(v) for k, v in state.get("phi", {}).items()}
+        self._seen = {(int(p), int(e)) for p, e in state.get("seen", [])}
 
-    def plan(self, step: int, n_chunks: int = 4,
-             wire_dtype: str = "float32") -> collectives.PathPlan:
-        """PathPlan avoiding currently quarantined paths."""
+    def plan(self, step: int, n_chunks: int = 4, wire_dtype: str = "float32",
+             version: int | None = None) -> collectives.PathPlan:
+        """PathPlan avoiding currently quarantined paths.  ``version``
+        defaults to ``step`` — successive planning epochs emit strictly
+        increasing versions, the precondition of ``apply_plan``'s
+        regression guard."""
         return collectives.PathPlan(
             n_chunks=n_chunks,
             directions=tuple(self.directions),
             inactive=self.inactive(step),
             wire_dtype=wire_dtype,
+            version=step if version is None else version,
         )
+
+
+# --------------------------------------------------- telemetry blackout
+@dataclasses.dataclass
+class TelemetryWatchdog:
+    """Blackout detector for the congestion-feedback channel: after
+    ``blackout_epochs`` consecutive planning epochs with ZERO admissible
+    telemetry deliveries (congestion reports or liveness heartbeats), the
+    planner must stop steering on its increasingly stale state and fall
+    back to the conservative primary-path/ECMP default — a blind planner
+    concentrating traffic around quarantines it can no longer verify is
+    worse than no planner at all.  One admissible delivery recovers it.
+
+    State machine (DESIGN.md §14): NORMAL --k silent epochs--> SAFE
+    --any admissible delivery--> NORMAL.  ``observe`` returns the
+    transition taken: "ok" / "silent" (counting down) / "safe" (in or
+    entering safe mode) / "recovered"."""
+
+    blackout_epochs: int = 3
+
+    def __post_init__(self):
+        assert self.blackout_epochs >= 1, self.blackout_epochs
+        self._silent = 0
+        self._safe = False
+
+    @property
+    def safe_mode(self) -> bool:
+        return self._safe
+
+    def silent_epochs(self) -> int:
+        return self._silent
+
+    def observe(self, n_admissible: int) -> str:
+        """Feed one epoch's admissible-delivery count; returns the step
+        taken ("ok" / "silent" / "safe" / "recovered")."""
+        assert n_admissible >= 0, n_admissible
+        if n_admissible > 0:
+            self._silent = 0
+            if self._safe:
+                self._safe = False
+                return "recovered"
+            return "ok"
+        self._silent += 1
+        if self._silent >= self.blackout_epochs:
+            self._safe = True
+            return "safe"
+        return "silent"
+
+    def state(self) -> dict:
+        """JSON-able snapshot for campaign journaling (``dist.cosim``)."""
+        return dict(silent=self._silent, safe=self._safe)
+
+    def restore(self, state: dict) -> None:
+        self._silent = int(state.get("silent", 0))
+        self._safe = bool(state.get("safe", False))
 
 
 # ------------------------------------------------------------- pod remesh

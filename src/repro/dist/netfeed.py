@@ -59,17 +59,22 @@ def _paths_for_uplink(topo, uplink: int) -> tuple[int, ...]:
     return (uplink,)  # leaf_spine: uplink s <-> path s
 
 
-def report_congestion(health: LinkHealth, topo, outs, *, step: int = 0,
-                      leaf: int | None = None, overload: float = 1.5,
-                      dead_capacity_frac: float = 0.01,
-                      capacity: np.ndarray | None = None,
-                      loss: np.ndarray | None = None,
-                      loss_threshold: float = 1e-3) -> tuple[int, ...]:
-    """Feed one simulation's per-path stats into ``health``.
+def observe_congestion(topo, outs, *, leaf: int | None = None,
+                       overload: float = 1.5,
+                       dead_capacity_frac: float = 0.01,
+                       capacity: np.ndarray | None = None,
+                       loss: np.ndarray | None = None,
+                       loss_threshold: float = 1e-3) -> tuple[int, ...]:
+    """Pure observation: which paths does one simulation's per-path stats
+    say are slow?  No health mutation — this is what the OBSERVER sees at
+    the fabric, before the reports cross any (possibly lossy/delayed)
+    telemetry channel back to the planner.  Returns the slow path ids
+    (deduped, in report order, duplicates from overlapping uplink/loss
+    rules collapsed).
 
-    A path is reported slow when its uplink's time-mean offered load
-    exceeded ``overload``x capacity (sustained congestion: the queue grew
-    through the whole trace), or when the uplink's capacity itself is below
+    A path is slow when its uplink's time-mean offered load exceeded
+    ``overload``x capacity (sustained congestion: the queue grew through
+    the whole trace), or when the uplink's capacity itself is below
     ``dead_capacity_frac`` of the leaf-median (a failed/downed spine —
     offered load on a dead link may legitimately decay to zero once DCQCN
     chokes the victims, but the path is still unusable), or — with a
@@ -78,11 +83,9 @@ def report_congestion(health: LinkHealth, topo, outs, *, step: int = 0,
     through go-back-N long before its utilization looks congested, the
     signal a deployment reads from retransmission counters.
     ``capacity`` overrides ``topo.capacity`` (the co-sim driver's per-epoch
-    fault state).  Returns the quarantined path ids (deduped, in report
-    order)."""
+    fault state)."""
     from repro.netsim.topology import paths_for_link
 
-    assert health.n_paths == topo.n_paths, (health.n_paths, topo.n_paths)
     util = path_utilization(topo, outs, leaf=leaf, capacity=capacity)
     cap_vec = np.asarray(topo.capacity if capacity is None else capacity)
     cap = cap_vec[np.asarray(topo.uplink_ids)]  # [L, S]
@@ -91,16 +94,36 @@ def report_congestion(health: LinkHealth, topo, outs, *, step: int = 0,
     slow: list[int] = []
     for u in range(util.shape[0]):
         if util[u] > overload or dead[u]:
-            for p in _paths_for_uplink(topo, u):
-                health.report_slow(p, step)
-                slow.append(p)
+            slow.extend(_paths_for_uplink(topo, u))
     if loss is not None:
         lv = np.asarray(loss)
         for link in np.nonzero(lv[:topo.n_links] > loss_threshold)[0]:
-            for p in paths_for_link(topo, int(link)):
-                health.report_slow(p, step)
-                slow.append(p)
+            slow.extend(paths_for_link(topo, int(link)))
     return tuple(dict.fromkeys(slow))
+
+
+def report_congestion(health: LinkHealth, topo, outs, *, step: int = 0,
+                      leaf: int | None = None, overload: float = 1.5,
+                      dead_capacity_frac: float = 0.01,
+                      capacity: np.ndarray | None = None,
+                      loss: np.ndarray | None = None,
+                      loss_threshold: float = 1e-3) -> tuple[int, ...]:
+    """Feed one simulation's per-path stats into ``health`` — the
+    perfect-channel path: every slow path observed by
+    ``observe_congestion`` lands in ``health.report_slow`` immediately, in
+    order, exactly once (``report_slow`` is idempotent for same-step
+    repeats, so the dedup is cosmetic).  The degraded-telemetry path in
+    ``dist.cosim`` sends the SAME observation through a
+    ``faults.TelemetryChannel`` and admits what survives via
+    ``health.admit_report`` instead.  Returns the quarantined path ids."""
+    assert health.n_paths == topo.n_paths, (health.n_paths, topo.n_paths)
+    slow = observe_congestion(
+        topo, outs, leaf=leaf, overload=overload,
+        dead_capacity_frac=dead_capacity_frac, capacity=capacity,
+        loss=loss, loss_threshold=loss_threshold)
+    for p in slow:
+        health.report_slow(p, step)
+    return slow
 
 
 @dataclasses.dataclass

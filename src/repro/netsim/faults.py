@@ -182,6 +182,15 @@ class Onset(NamedTuple):
     paths: tuple[int, ...]
 
 
+def _event_key(ev) -> tuple:
+    """Campaign-dedup identity: (kind, links-or-rank, epoch window).  Two
+    events sharing a key hit the same links over the same span — whatever
+    their magnitudes, composing them double-counts one physical fault
+    (two identical brownouts multiply into a quadratic one)."""
+    where = tuple(ev.links) if hasattr(ev, "links") else ("rank", ev.rank)
+    return (type(ev).__name__, where, ev.start_epoch, ev.end_epoch)
+
+
 # --------------------------------------------------------------- campaign
 def _flap_down_segments(ev: LinkFlap, epoch: int, K: int) -> np.ndarray:
     """bool[K]: segments in which ``ev``'s links are down this epoch."""
@@ -210,8 +219,17 @@ class FaultCampaign:
 
     def __post_init__(self):
         assert self.n_segments >= 1, self.n_segments
+        seen: set[tuple] = set()
         for ev in self.events:
             assert hasattr(ev, "active"), ev
+            key = _event_key(ev)
+            # a duplicate-seed campaign (same kind, links, window twice)
+            # silently double-counts one physical fault — two stacked 0.5x
+            # brownouts are a 0.25x one nobody asked for.  Reject at
+            # construction; composing DIFFERENT windows/links is fine.
+            assert key not in seen, \
+                f"duplicate campaign event (kind, links, window): {key}"
+            seen.add(key)
 
     def seg_steps(self, n_steps: int) -> int:
         """Steps per capacity-schedule segment (the static stride the
@@ -304,34 +322,175 @@ def random_campaign(topo, *, seed: int, epochs: int, n_faults: int = 3,
     n_spines = topo.uplink_ids.shape[1]
     rng = np.random.default_rng(seed)
     events: list = []
-    for _ in range(n_faults):
+    keys: set[tuple] = set()
+    attempts = 0
+    while len(events) < n_faults:
+        # a colliding (kind, links, window) draw would be rejected by
+        # FaultCampaign as a double-counted fault — redraw instead (the
+        # no-collision path consumes the exact legacy RNG sequence, so
+        # existing seeded campaigns replay unchanged)
+        attempts += 1
+        assert attempts <= 100 * n_faults, \
+            "random_campaign cannot draw enough distinct faults"
         kind = str(rng.choice(kinds))
         start = int(rng.integers(1, max(epochs - 2, 2)))
         end = min(epochs, start + int(rng.integers(2, 4)))
         spine = int(rng.integers(n_spines))
         links = spine_links(topo, spine)
         if kind == "flap":
-            events.append(LinkFlap(
+            ev = LinkFlap(
                 links=links, start_epoch=start, end_epoch=end,
                 period_frac=float(rng.uniform(0.25, 0.5)),
                 duty=float(rng.uniform(0.3, 0.7)),
-                onset_frac=float(rng.uniform(0.2, 0.6))))
+                onset_frac=float(rng.uniform(0.2, 0.6)))
         elif kind == "brownout":
-            events.append(Brownout(
+            ev = Brownout(
                 links=links, scale=float(rng.uniform(0.1, 0.5)),
-                start_epoch=start, end_epoch=end))
+                start_epoch=start, end_epoch=end)
         elif kind == "lossy":
-            events.append(LossyLink(
+            ev = LossyLink(
                 links=links, loss_rate=float(rng.uniform(0.005, 0.05)),
-                start_epoch=start, end_epoch=end))
+                start_epoch=start, end_epoch=end)
         elif kind == "pause":
-            events.append(PauseWindow(
+            ev = PauseWindow(
                 links=links, start_epoch=start, end_epoch=end,
                 onset_frac=float(rng.uniform(0.1, 0.5)),
-                width_frac=float(rng.uniform(0.1, 0.3))))
+                width_frac=float(rng.uniform(0.1, 0.3)))
         else:  # straggler
-            events.append(Straggler(
+            ev = Straggler(
                 rank=int(rng.integers(n_ranks)),
                 slowdown=float(rng.uniform(2.0, 4.0)),
-                start_epoch=start, end_epoch=end))
+                start_epoch=start, end_epoch=end)
+        key = _event_key(ev)
+        if key in keys:
+            continue
+        keys.add(key)
+        events.append(ev)
     return FaultCampaign(events=tuple(events), n_segments=n_segments)
+
+
+# ------------------------------------------------------ telemetry channel
+@dataclasses.dataclass
+class TelemetryChannel:
+    """The degraded CONTROL plane: a seeded model of the feedback path that
+    carries congestion reports (and liveness heartbeats) from the fabric
+    back to the planner.  The chaos campaign above makes the *data* plane
+    hostile; this makes the *report* path hostile — at hyperscale the
+    feedback channel is itself lossy and delayed (arXiv 2302.03337), and a
+    no-reordering balancer that trusts stale or duplicated reports breaks
+    its own invariant (arXiv 2412.08540).
+
+    Per report: dropped with probability ``loss``; otherwise delivered
+    ``delay_epochs`` (+ uniform extra in [0, jitter_epochs]) planning
+    epochs after it was sent — jitter makes deliveries REORDER across
+    epochs; with probability ``dup`` a second, independently delayed copy
+    is delivered too.  ``reorder`` additionally shuffles the within-epoch
+    delivery order (seeded).  ``blackout=(b0, b1)`` models a dead feedback
+    path: any report SENT or DELIVERED inside [b0, b1) is lost — the
+    scenario that must trip ``dist.elastic.TelemetryWatchdog``.
+
+    Deterministic in ``seed`` and the send sequence; ``state``/``restore``
+    round-trip the queue, the counters, and the RNG through the co-sim
+    journal so a resumed campaign replays bit-identically.  A channel
+    constructed with all-default degradation (loss=0, delay=0, jitter=0,
+    dup=0, no blackout) delivers every report exactly once in order in its
+    send epoch — bit-identical planner behavior to no channel at all (the
+    property-tested perfect-channel contract)."""
+
+    loss: float = 0.0
+    delay_epochs: int = 0
+    jitter_epochs: int = 0
+    dup: float = 0.0
+    reorder: bool = False
+    seed: int = 0
+    blackout: tuple[int, int] | None = None
+
+    def __post_init__(self):
+        assert 0.0 <= self.loss <= 1.0, self.loss
+        assert 0.0 <= self.dup <= 1.0, self.dup
+        assert self.delay_epochs >= 0 and self.jitter_epochs >= 0
+        if self.blackout is not None:
+            b0, b1 = self.blackout
+            assert 0 <= b0 < b1, self.blackout
+        self._rng = np.random.default_rng(self.seed)
+        self._pending: dict[int, list[tuple[tuple, int]]] = {}
+        self.sent = 0
+        self.dropped = 0
+        self.delivered = 0
+
+    def config(self) -> dict:
+        """JSON-stable identity of the channel's degradation parameters
+        (the co-sim journal's spec key — a different channel is a
+        different campaign)."""
+        return dict(
+            loss=float(self.loss), delay_epochs=int(self.delay_epochs),
+            jitter_epochs=int(self.jitter_epochs), dup=float(self.dup),
+            reorder=bool(self.reorder), seed=int(self.seed),
+            blackout=None if self.blackout is None else
+            [int(self.blackout[0]), int(self.blackout[1])],
+        )
+
+    def _blacked_out(self, epoch: int) -> bool:
+        return self.blackout is not None \
+            and self.blackout[0] <= epoch < self.blackout[1]
+
+    def _arrival(self, epoch: int) -> int:
+        extra = int(self._rng.integers(0, self.jitter_epochs + 1)) \
+            if self.jitter_epochs else 0
+        return epoch + self.delay_epochs + extra
+
+    def send(self, payload: tuple, epoch: int) -> None:
+        """Emit one epoch-stamped report.  ``payload`` is an opaque tuple
+        (``dist.cosim`` sends ``("slow", path)`` and ``("hb", leaf)``)."""
+        self.sent += 1
+        # draw loss/dup/jitter unconditionally so the RNG stream — and
+        # therefore every later report's fate — does not depend on whether
+        # THIS epoch fell inside a blackout window
+        lost = self.loss > 0.0 and float(self._rng.random()) < self.loss
+        arrive = self._arrival(epoch)
+        duped = self.dup > 0.0 and float(self._rng.random()) < self.dup
+        arrive2 = self._arrival(epoch) + 1 if duped else -1
+        if lost or self._blacked_out(epoch):
+            self.dropped += 1
+            return
+        self._pending.setdefault(arrive, []).append((tuple(payload), epoch))
+        if duped:
+            self._pending.setdefault(arrive2, []).append(
+                (tuple(payload), epoch))
+
+    def deliver(self, epoch: int) -> list[tuple[tuple, int]]:
+        """All (payload, origin_epoch) reports arriving by ``epoch`` that
+        were not already collected — reports whose delivery epoch lands in
+        a blackout window are lost in flight.  Call once per epoch, in
+        epoch order."""
+        batch: list[tuple[tuple, int]] = []
+        for k in sorted(e for e in self._pending if e <= epoch):
+            batch.extend(self._pending.pop(k))
+        if self._blacked_out(epoch):
+            self.dropped += len(batch)
+            return []
+        if self.reorder and len(batch) > 1:
+            batch = [batch[i] for i in self._rng.permutation(len(batch))]
+        self.delivered += len(batch)
+        return batch
+
+    def state(self) -> dict:
+        """JSON-able snapshot (queue + counters + RNG) for the co-sim
+        journal; ``restore`` makes a resumed run replay bit-identically."""
+        return dict(
+            pending={str(k): [[list(p), o] for p, o in v]
+                     for k, v in self._pending.items()},
+            sent=self.sent, dropped=self.dropped, delivered=self.delivered,
+            rng=self._rng.bit_generator.state,
+        )
+
+    def restore(self, state: dict) -> None:
+        self._pending = {
+            int(k): [(tuple(p), int(o)) for p, o in v]
+            for k, v in state.get("pending", {}).items()
+        }
+        self.sent = int(state.get("sent", 0))
+        self.dropped = int(state.get("dropped", 0))
+        self.delivered = int(state.get("delivered", 0))
+        if state.get("rng"):
+            self._rng.bit_generator.state = state["rng"]

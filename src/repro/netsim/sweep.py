@@ -530,15 +530,33 @@ class JobFailure:
         return True
 
 
+def retry_sleep_s(index: int, attempt: int, backoff_s: float,
+                  jitter_frac: float) -> float:
+    """Jittered exponential backoff for retry ``attempt`` of job ``index``:
+    base ``backoff_s * 2**(attempt-1)`` (capped at 30 s) stretched by a
+    uniform factor in [1, 1 + jitter_frac].  The jitter is DETERMINISTIC —
+    seeded on (index, attempt) — so tests replay it exactly, yet
+    decorrelated across jobs: a pool of cells that all failed together
+    (one flaky dependency hiccup) re-arrives spread out instead of as a
+    synchronized retry storm re-hammering whatever just recovered.
+    ``backoff_s == 0`` sleeps 0 regardless of jitter (the test fast path)."""
+    base = min(backoff_s * (2 ** (attempt - 1)), 30.0)
+    if base <= 0.0 or jitter_frac <= 0.0:
+        return base
+    u = float(np.random.default_rng((index, attempt)).uniform())
+    return base * (1.0 + jitter_frac * u)
+
+
 def _run_job_resilient(job, index: int, *, retries: int, backoff_s: float,
-                       salvage: bool):
+                       salvage: bool, jitter_frac: float = 0.5):
     t0 = time.time()
     for attempt in range(1, retries + 2):
         try:
             return _run_job(job)
         except Exception as e:  # noqa: BLE001 — grid cells fail arbitrarily
             if attempt <= retries:
-                time.sleep(min(backoff_s * (2 ** (attempt - 1)), 30.0))
+                time.sleep(retry_sleep_s(index, attempt, backoff_s,
+                                         jitter_frac))
                 continue
             if not salvage:
                 raise
@@ -555,6 +573,7 @@ def run_jobs(
     timeout_s: float | None = None,
     retries: int = 0,
     backoff_s: float = 0.5,
+    jitter_frac: float = 0.5,
     salvage: bool = False,
 ) -> list:
     """Run independent sweep jobs (e.g. one per scheme, or one co-sim epoch
@@ -570,8 +589,11 @@ def run_jobs(
     Crash-proofing (all off by default — the bare call is unchanged):
 
       * ``retries``   — re-run a raising job up to this many extra times,
-        sleeping ``backoff_s * 2**attempt`` (capped at 30 s) between tries;
-        transient failures (OOM races, flaky I/O) get a second chance.
+        sleeping ``backoff_s * 2**attempt`` (capped at 30 s, stretched by
+        the seeded per-(job, attempt) jitter of ``retry_sleep_s`` so
+        simultaneous failures don't retry as a synchronized storm;
+        ``jitter_frac=0`` disables) between tries; transient failures
+        (OOM races, flaky I/O) get a second chance.
       * ``salvage``   — a job that still fails returns a ``JobFailure``
         poisoned record IN PLACE, instead of propagating and killing every
         other cell of the grid; the caller decides what a dead cell costs.
@@ -591,7 +613,7 @@ def run_jobs(
     if workers == 1 or len(jobs) == 1:
         return [
             _run_job_resilient(j, i, retries=retries, backoff_s=backoff_s,
-                               salvage=salvage)
+                               salvage=salvage, jitter_frac=jitter_frac)
             for i, j in enumerate(jobs)
         ]
     pool = cf.ThreadPoolExecutor(max_workers=workers)
@@ -599,7 +621,8 @@ def run_jobs(
     try:
         futs = [
             pool.submit(_run_job_resilient, j, i, retries=retries,
-                        backoff_s=backoff_s, salvage=salvage)
+                        backoff_s=backoff_s, salvage=salvage,
+                        jitter_frac=jitter_frac)
             for i, j in enumerate(jobs)
         ]
         out = []

@@ -1,0 +1,121 @@
+"""Hypothesis property tests for the degraded-telemetry invariants
+(ISSUE 7):
+
+  * a perfect TelemetryChannel (loss=0, delay=0, dup=0, no blackout) is
+    bit-identical to no channel at all: every report delivered exactly
+    once, in order, in its send epoch, so a LinkHealth fed through it
+    matches one fed directly;
+  * duplicate delivery is idempotent: admitting any report sequence with
+    arbitrary repeats leaves LinkHealth in exactly the state of admitting
+    the deduped sequence;
+  * the staleness bound is monotone: every report a tighter bound admits,
+    a looser bound admits too — so loosening the bound can only ADD
+    quarantines, never drop one (with cooldown 0, where admission order
+    cannot interact with flap hysteresis).
+
+Hypothesis is an optional dependency (not in the CI image) — these skip
+when it is absent; seeded spot checks of the same properties run
+unconditionally in tests/test_telemetry.py.
+"""
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.dist.elastic import LinkHealth  # noqa: E402
+from repro.netsim.faults import TelemetryChannel  # noqa: E402
+
+
+def _health_key(h: LinkHealth) -> tuple:
+    return (tuple(sorted(h._last_report.items())),
+            tuple(sorted(h._phi.items())))
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    sends=st.lists(st.tuples(st.integers(0, 3), st.integers(0, 10)),
+                   max_size=40),
+    seed=st.integers(0, 5),
+    phi=st.integers(1, 5),
+)
+def test_perfect_channel_is_bit_identical_to_no_channel(sends, seed, phi):
+    ch = TelemetryChannel(seed=seed)  # all-default degradation = perfect
+    direct = LinkHealth(n_paths=4, phi_steps=phi)
+    via = LinkHealth(n_paths=4, phi_steps=phi)
+    sends = sorted(sends, key=lambda s: s[1])
+    for epoch in range(12):
+        for path, e in sends:
+            if e == epoch:
+                direct.report_slow(path, epoch)
+                ch.send(("slow", path), epoch)
+        batch = ch.deliver(epoch)
+        assert batch == [(("slow", p), e) for p, e in sends if e == epoch]
+        for payload, origin in batch:
+            assert origin == epoch  # no delay: arrives in its send epoch
+            via.report_slow(payload[1], epoch)
+    assert ch.sent == ch.delivered and ch.dropped == 0
+    assert _health_key(direct) == _health_key(via)
+    for step in range(16):
+        assert direct.inactive(step) == via.inactive(step)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    reports=st.lists(
+        st.tuples(st.integers(0, 3), st.integers(0, 8), st.integers(0, 3)),
+        max_size=30),
+    bound=st.one_of(st.none(), st.integers(0, 6)),
+    phi=st.integers(1, 5),
+    cooldown=st.integers(0, 4),
+)
+def test_duplicate_delivery_is_idempotent(reports, bound, phi, cooldown):
+    # reports: (path, origin, extra_delay); deliveries happen in epoch
+    # order; duplicates = the same (path, origin) delivered again later
+    deliveries = sorted(((p, o, o + d) for p, o, d in reports),
+                        key=lambda r: r[2])
+    once = LinkHealth(n_paths=4, phi_steps=phi, cooldown_steps=cooldown,
+                      max_staleness_epochs=bound)
+    twice = LinkHealth(n_paths=4, phi_steps=phi, cooldown_steps=cooldown,
+                       max_staleness_epochs=bound)
+    for p, o, now in deliveries:
+        once.admit_report(p, o, now)
+        twice.admit_report(p, o, now)
+        v = twice.admit_report(p, o, now)  # immediate duplicate delivery
+        assert v in ("duplicate", "stale")
+    # and a full replay of the whole sequence afterwards is absorbed too
+    last = max((now for _, _, now in deliveries), default=0)
+    for p, o, now in deliveries:
+        v = twice.admit_report(p, o, last)
+        assert v in ("duplicate", "stale")
+    assert _health_key(once) == _health_key(twice)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    reports=st.lists(
+        st.tuples(st.integers(0, 3), st.integers(0, 8), st.integers(0, 4)),
+        max_size=30),
+    tight=st.integers(0, 4),
+    loosen=st.integers(0, 4),
+    phi=st.integers(1, 5),
+    probe=st.integers(0, 20),
+)
+def test_staleness_bound_is_monotone(reports, tight, loosen, phi, probe):
+    # cooldown 0: admission cannot interact with flap hysteresis, so the
+    # loose health's state dominates the tight one's pointwise
+    a = LinkHealth(n_paths=4, phi_steps=phi, max_staleness_epochs=tight)
+    b = LinkHealth(n_paths=4, phi_steps=phi,
+                   max_staleness_epochs=tight + loosen)
+    deliveries = sorted(((p, o, o + d) for p, o, d in reports),
+                        key=lambda r: r[2])
+    for p, o, now in deliveries:
+        va = a.admit_report(p, o, now)
+        vb = b.admit_report(p, o, now)
+        if va == "admitted":  # the tight bound admits -> the loose one must
+            assert vb in ("admitted", "duplicate")
+        if vb == "stale":  # the loose bound rejects -> the tight one must
+            assert va == "stale"
+    # any path the tight health quarantines, the loose one quarantines too
+    for qa, qb in zip(a.inactive(probe), b.inactive(probe)):
+        assert qb or not qa
