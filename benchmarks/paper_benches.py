@@ -325,6 +325,145 @@ def bench_netsim_speedup(fast=True):
     )
 
 
+# ------------------------------------------- adaptive dt (DESIGN.md §15)
+def _collective_setup():
+    """The sparse AI-training workload the adaptive engine targets: a
+    ring all-reduce with 800 µs compute gaps between rounds — most chunk
+    boundaries are quiescent (flows done, queues drained, next round's
+    arrival still in the future)."""
+    from repro.dist import collectives, cosim
+    from repro.netsim import topology, workloads
+    from repro.netsim.engine import SimConfig
+
+    topo = topology.leaf_spine(4, 4, 4, 100e9)
+    hosts = cosim.ring_hosts(topo, 8)
+    plan = collectives.PathPlan(n_chunks=4, directions=(1, -1, 1, -1))
+    trace = workloads.collective_trace(plan, hosts, 4e6, link_bw=100e9,
+                                       round_gap_s=800e-6, seed=0,
+                                       steer_paths=topo.n_paths)
+    cfg = SimConfig(scheme="seqbalance", duration_s=14e-3,
+                    uplink_sample_every=10)
+    return topo, cfg, trace
+
+
+def bench_adaptive_dt(fast=True):
+    """Acceptance bench for the event-driven adaptive-dt engine
+    (DESIGN.md §15).  Two workload regimes, both adaptive-vs-fixed-dt on
+    the SAME compact engine (warm executables — this isolates the step
+    loop, not compile time):
+
+      * sparse collective trace — rounds separated by compute gaps; the
+        quiescence fast-forward must cover the gaps (>= 2x wall clock);
+      * the Fig. 12 fast sweep — loaded Poisson traffic where every chunk
+        contains arrivals or finishes, so nothing CAN fast-forward; the
+        predicate short-circuit must keep adaptive at parity (the floor
+        guards the overhead, not a win).
+
+    Also records the adaptive-vs-fixed FCT stat divergence (tolerance
+    model: <= 0.01 %) and the executable-reuse contract (zero cache builds
+    after the first adaptive dispatch of each shape).  The recorded
+    ``floors`` are what scripts/check_bench.py --adaptive gates future
+    runs against."""
+    import dataclasses
+    import time
+
+    from repro.netsim import sweep
+
+    topoL, cfg_f, trc = _collective_setup()
+    cfg_a = dataclasses.replace(cfg_f, adaptive=True)
+    iters = 3 if fast else 5
+
+    def wall_one(topo, c, tr):
+        res, _ = sweep.run_one(topo, c, tr)  # compile + warm
+        t0 = time.time()
+        for _ in range(iters):
+            res, _ = sweep.run_one(topo, c, tr)
+        return (time.time() - t0) / iters, res
+
+    sweep.clear_cache()
+    wall_f, res_f = wall_one(topoL, cfg_f, trc)
+    wall_a, res_a = wall_one(topoL, cfg_a, trc)
+    builds_warm = sweep.cache_stats()["builds"]
+    sweep.run_one(topoL, cfg_a, trc)
+    rebuilds = sweep.cache_stats()["builds"] - builds_warm
+
+    n_steps = int(round(cfg_f.duration_s / cfg_f.dt))
+    stats_f = fct(res_f, trc, topoL, 100e9)
+    stats_a = fct(res_a, trc, topoL, 100e9)
+    col_diff = max(
+        abs(stats_a[s] / stats_f[s] - 1) * 100
+        for s in ("avg_slowdown", "p99_slowdown"))
+    col_speedup = wall_f / wall_a
+    ff = int(res_a.ff_steps)
+    emit("adaptive_collective_speedup", wall_a * 1e6,
+         f"{col_speedup:.2f}x_ff_{ff}of{n_steps}_stat_diff_{col_diff:.4f}%")
+
+    # Fig. 12 fast sweep, warm-vs-warm (the fixed-dt cold-compile cost is
+    # already recorded in PERF["fig12_sweep"])
+    from repro.netsim import topology
+
+    topo2 = topology.sim_2tier()
+    arr = 2.5e-3 if fast else 10e-3
+    dur = arr * 4
+    cases = fig12_cases(fast)
+    schemes = ("drill", "ecmp", "seqbalance", "letflow", "conga")
+    traces = {c: _poisson(topo2, c[0], c[1], arr) for c in cases}
+
+    def sweep_once(**cfg_kw):
+        t0 = time.time()
+        results, _ = run_sim_jobs(topo2, [traces[c] for c in cases], schemes,
+                                  dur, uplink_sample_every=10, **cfg_kw)
+        wall = time.time() - t0
+        stats, ff_total = {}, 0
+        for scheme in schemes:
+            for c, (st, _) in zip(cases, results[scheme]):
+                stats[(scheme, c)] = fct(st, traces[c], topo2, 100e9)
+                ff_total += int(getattr(st, "ff_steps", 0))
+        return wall, stats, ff_total
+
+    # warm both variants, then interleave and keep the per-variant minimum
+    # — worker-thread contention spikes hit whichever sweep is running,
+    # so back-to-back single measurements systematically smear the ratio
+    sweep_once()
+    sweep_once(adaptive=True)
+    fig_wall_f, fig_wall_a = float("inf"), float("inf")
+    for _ in range(2):
+        w, fig_stats_f, _ = sweep_once()
+        fig_wall_f = min(fig_wall_f, w)
+        w, fig_stats_a, fig_ff = sweep_once(adaptive=True)
+        fig_wall_a = min(fig_wall_a, w)
+    fig_diff = max(
+        abs(fig_stats_a[k][s] / fig_stats_f[k][s] - 1) * 100
+        for k in fig_stats_f for s in ("avg_slowdown", "p99_slowdown"))
+    fig_speedup = fig_wall_f / fig_wall_a
+    emit("adaptive_fig12_sweep", fig_wall_a * 1e6 / (len(cases) * len(schemes)),
+         f"{fig_speedup:.2f}x_vs_fixed_ff_{fig_ff}_stat_diff_{fig_diff:.4f}%")
+    emit("adaptive_rebuilds_after_first", 0.0, f"{rebuilds}_new_executables")
+
+    max_diff = max(col_diff, fig_diff)
+    PERF["adaptive_dt"] = dict(
+        fast=fast,
+        collective=dict(
+            fixed_wall_s=round(wall_f, 3), adaptive_wall_s=round(wall_a, 3),
+            speedup=round(col_speedup, 2), ff_steps=ff, n_steps=n_steps,
+            ff_fraction=round(ff / n_steps, 3),
+            max_stat_diff_pct=round(col_diff, 4)),
+        fig12=dict(
+            fixed_wall_s=round(fig_wall_f, 2),
+            adaptive_wall_s=round(fig_wall_a, 2),
+            speedup=round(fig_speedup, 2), ff_steps=fig_ff,
+            max_stat_diff_pct=round(fig_diff, 4)),
+        max_stat_diff_pct=round(max_diff, 4),
+        rebuilds_after_first=int(rebuilds),
+        # gate floors (scripts/check_bench.py --adaptive): the collective
+        # win is the acceptance bar; the fig12 floor guards predicate
+        # overhead on event-dense traffic, where ff_steps == 0 by design
+        # (every chunk has arrivals/finishes — there is nothing to skip,
+        # so parity IS the win; see DESIGN.md §15)
+        floors=dict(collective_speedup=2.0, fig12_speedup=0.85),
+    )
+
+
 # ------------------------------------------- --profile (run.py flag)
 def bench_profile_phases(fast=True, schemes=("seqbalance", "ecmp")):
     """Per-phase step-cost breakdown of the compact engine (admit /
@@ -346,6 +485,27 @@ def bench_profile_phases(fast=True, schemes=("seqbalance", "ecmp")):
                  f"{times[phase]/max(times['phase_sum'],1e-9)*100:.0f}%_of_phase_sum")
         emit(f"profile_{scheme}_step_fused", times["step_fused"],
              f"phase_sum_{times['phase_sum']:.1f}us_W_{times['window_slots']}")
+
+    # quiescence occupancy (DESIGN.md §15): replay the fixed-dt oracle and
+    # record which chunk boundaries the adaptive engine would fast-forward
+    # — the sparse collective trace (where the win lives) and the dense
+    # fig12 trace (where the occupancy shows why there is none)
+    topoL, cfgL, trcL = _collective_setup()
+    for name, (t_, c_, tr_) in (
+            ("collective", (topoL, cfgL, trcL)),
+            ("fig12_ali80", (topo, SimConfig(scheme="seqbalance",
+                                             duration_s=arr * 4,
+                                             uplink_sample_every=10), trace))):
+        q = profile.quiescence_profile(t_, c_, tr_)
+        hist = "/".join(f"{k}x{v}" for k, v in sorted(q["macro_hist"].items()))
+        emit(f"profile_quiescence_{name}", q["predicate_us"],
+             f"ff_fraction_{q['ff_fraction']:.3f}_macro_hist_{hist or 'none'}"
+             f"_K_{q['chunk_steps']}")
+        record[f"quiescence_{name}"] = dict(
+            ff_fraction=round(q["ff_fraction"], 4),
+            predicate_us=round(q["predicate_us"], 2),
+            macro_hist={str(k): v for k, v in sorted(q["macro_hist"].items())},
+            chunk_steps=q["chunk_steps"], n_chunks=q["n_chunks"])
     PERF["profile"] = record
 
 
@@ -360,4 +520,5 @@ ALL = [
     bench_fig13_imbalance,
     bench_fig14_fct_3tier,
     bench_netsim_speedup,
+    bench_adaptive_dt,
 ]

@@ -14,6 +14,12 @@ Compares a freshly measured fig12 fast-sweep record (benchmarks/run.py
 The baseline record may contain several runs (before/after rows across
 PRs); the gate reads the top-level "fig12_sweep" entry — the current one.
 
+``--adaptive`` switches to the adaptive-dt gate (BENCH_netsim.json
+["adaptive_dt"]): adaptive-vs-fixed stat divergence over --max-stat-diff,
+a speedup below the baseline's recorded floors, a collective run that
+never fast-forwards, or any executable rebuild after the first adaptive
+dispatch all fail.
+
 ``--cosim`` switches to the co-simulation convergence gate instead: rows
 under "cosim" are matched by (topo, scheme, ring, seed) and the run fails
 when a scenario's convergence-epoch count regressed by MORE than 1 vs the
@@ -254,6 +260,67 @@ def check_telemetry(new: dict | None, base: dict | None) -> int:
     return 0 if ok else 1
 
 
+def check_adaptive(new: dict | None, base: dict | None,
+                   max_stat_diff: float = 0.01) -> int:
+    """Adaptive-dt gate (BENCH_netsim.json["adaptive_dt"], DESIGN.md §15):
+
+      * adaptive-vs-fixed FCT stat divergence <= ``max_stat_diff`` percent
+        on BOTH regimes (the tolerance model — adaptive is an
+        approximation only where the quiescence predicate proved it
+        exact, so divergence beyond float noise means the predicate
+        admitted a non-quiescent span);
+      * the sparse-collective and fig12 speedups may not fall below the
+        BASELINE's recorded floors (collective: the >= 2x acceptance bar;
+        fig12: the parity guard — event-dense traffic fast-forwards
+        nothing, so the floor pins the predicate overhead at ~free);
+      * the collective trace must actually fast-forward (ff_steps > 0) —
+        a silently-disabled predicate would pass every other check;
+      * zero executable-cache builds after the first adaptive dispatch
+        (adaptivity is data-dependent inside one program, never a
+        recompile)."""
+    if not new:
+        print("FAIL: new record has no adaptive_dt entry "
+              "(did --only adaptive run?)")
+        return 1
+    ok = True
+    diff = new.get("max_stat_diff_pct", float("inf"))
+    verdict = "OK" if diff <= max_stat_diff else "FAIL"
+    ok &= diff <= max_stat_diff
+    print(f"{verdict}: adaptive max_stat_diff_pct {diff:.4f} "
+          f"(limit {max_stat_diff})")
+
+    floors = (base or {}).get("floors") or new.get("floors") or {}
+    if not (base or {}).get("floors"):
+        print("WARN: baseline has no adaptive floors; using the fresh "
+              "record's own")
+    for regime, key in (("collective", "collective_speedup"),
+                        ("fig12", "fig12_speedup")):
+        sp = (new.get(regime) or {}).get("speedup")
+        floor = floors.get(key)
+        if sp is None or floor is None:
+            ok = False
+            print(f"FAIL: missing {regime} speedup or {key} floor")
+            continue
+        verdict = "OK" if sp >= floor else "FAIL"
+        ok &= sp >= floor
+        print(f"{verdict}: {regime} speedup {sp:.2f}x (floor {floor}x)")
+        if sp < floor and regime == "collective":
+            print("      note: floors are wall-clock from the machine that "
+                  "committed BENCH_netsim.json; on unrelated/slower "
+                  "hardware set REPRO_CI_SKIP_BENCH_GATE=1")
+
+    ff = (new.get("collective") or {}).get("ff_steps", 0)
+    verdict = "OK" if ff > 0 else "FAIL"
+    ok &= ff > 0
+    print(f"{verdict}: collective ff_steps {ff} (fast-forward engaged)")
+
+    rb = new.get("rebuilds_after_first", 0)
+    verdict = "OK" if rb == 0 else "FAIL"
+    ok &= rb == 0
+    print(f"{verdict}: rebuilds_after_first {rb}")
+    return 0 if ok else 1
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("new", help="fresh bench JSON (the run under test)")
@@ -269,12 +336,24 @@ def main() -> int:
                     help="gate the chaos-campaign rows (crashed cells, "
                          "reconvergence, worst censored p99) instead of "
                          "the fig12 sweep")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="gate the adaptive-dt record (stat divergence vs "
+                         "fixed dt, speedup floors, fast-forward engaged, "
+                         "zero rebuilds) instead of the fig12 sweep")
     ap.add_argument("--telemetry", action="store_true",
                     help="gate the degraded-telemetry rows (perfect-channel "
                          "bit-identity, lossy/delayed reconvergence, plan-"
                          "version monotonicity, blackout safe-mode) instead "
                          "of the fig12 sweep")
     args = ap.parse_args()
+
+    if args.adaptive:
+        with open(args.new) as f:
+            new_a = json.load(f).get("adaptive_dt")
+        with open(args.baseline) as f:
+            base_a = json.load(f).get("adaptive_dt")
+        return check_adaptive(new_a, base_a,
+                              max_stat_diff=args.max_stat_diff)
 
     if args.telemetry:
         with open(args.new) as f:

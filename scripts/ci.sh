@@ -129,3 +129,56 @@ if [ -z "${REPRO_CI_SKIP_BENCH_GATE:-}" ]; then
   python scripts/check_bench.py /tmp/BENCH_telemetry.json BENCH_netsim.json \
     --telemetry
 fi
+
+# adaptive-dt co-sim smoke on the forced 8-device platform: the killed-
+# spine scenario with the event-driven adaptive engine enabled must
+# reconverge at the same epoch as fixed dt with bit-identical FCT curves
+# (the cosim ring is back-to-back, so every chunk holds an event and the
+# quiescence predicate correctly never fires), must not rebuild any
+# executable after epoch 0, and the sparse collective workload (compute
+# gaps between rounds) must actually fast-forward with identical results.
+XLA_FLAGS="--xla_force_host_platform_device_count=8" python - <<'EOF3'
+import numpy as np
+from repro.dist import cosim
+from repro.netsim import sweep, topology, workloads
+from repro.netsim.engine import SimConfig
+
+topo = topology.leaf_spine(4, 4, 4, 100e9)
+hosts = cosim.ring_hosts(topo, 8)
+kw = dict(scheme="ecmp", epochs=6, phi_steps=2, n_chunks=4, seed=0,
+          faults=(cosim.kill_spine(topo, 2, epoch=1, recover_epoch=4),))
+h_f = cosim.run_cosim(topo, hosts, 4e6, **kw)
+h_a = cosim.run_cosim(topo, hosts, 4e6, adaptive=True, **kw)
+assert h_a.convergence_epoch(1) == h_f.convergence_epoch(1), (
+    h_a.convergence_epoch(1), h_f.convergence_epoch(1))
+p99_f = [r.fct_p99_s for r in h_f.records]
+p99_a = [r.fct_p99_s for r in h_a.records]
+assert p99_f == p99_a, "adaptive cosim diverged from fixed dt"
+builds_late = sum(r.new_builds for r in h_a.records[1:])
+assert builds_late == 0, f"{builds_late} rebuilds after epoch 0"
+from repro.dist import collectives
+plan = collectives.PathPlan(n_chunks=4, directions=(1, -1, 1, -1))
+trace = workloads.collective_trace(plan, hosts, 4e6, link_bw=100e9,
+                                   round_gap_s=800e-6, seed=0,
+                                   steer_paths=topo.n_paths)
+cfg = SimConfig(scheme="seqbalance", duration_s=14e-3,
+                uplink_sample_every=10)
+import dataclasses
+res_f, _ = sweep.run_one(topo, cfg, trace)
+res_a, _ = sweep.run_one(topo, dataclasses.replace(cfg, adaptive=True), trace)
+assert res_a.ff_steps > 0, "sparse collective never fast-forwarded"
+assert np.array_equal(np.asarray(res_f.finish), np.asarray(res_a.finish))
+print(f"adaptive smoke: cosim reconverged at epoch "
+      f"{h_a.convergence_epoch(1)} (p99 == fixed dt, 0 rebuilds), "
+      f"collective ff {res_a.ff_steps} steps, finish times identical")
+EOF3
+
+# adaptive-dt gate: rerun the adaptive bench and fail on adaptive-vs-fixed
+# stat divergence, a speedup below the committed floors (collective >= 2x,
+# fig12 parity), a collective run that never fast-forwards, or any
+# executable rebuild after the first adaptive dispatch.
+if [ -z "${REPRO_CI_SKIP_BENCH_GATE:-}" ]; then
+  python -m benchmarks.run --only adaptive --json /tmp/BENCH_adaptive.json
+  python scripts/check_bench.py /tmp/BENCH_adaptive.json BENCH_netsim.json \
+    --adaptive
+fi

@@ -140,6 +140,8 @@ class EpochRecord:
     reports_admitted: int = -1  # deliveries admitted by the staleness gate
     reports_stale: int = -1  # deliveries older than the staleness bound
     reports_duplicate: int = -1  # duplicated deliveries (idempotently dropped)
+    # --- adaptive-dt observables (0 = fixed dt or nothing fast-forwarded)
+    ff_steps: int = 0  # dt steps the quiescence fast-forward covered
 
 
 @dataclasses.dataclass
@@ -411,7 +413,7 @@ def run_cosim(
         one admissible delivery after the channel heals flips it back.
     """
     from repro.dist import collectives
-    from repro.netsim import metrics, sweep, workloads
+    from repro.netsim import compact, metrics, sweep, workloads
     from repro.netsim.engine import SimConfig
 
     hosts = list(hosts)
@@ -518,7 +520,13 @@ def run_cosim(
                 for ev in faults:  # epoch-level faults compose on top
                     if ev.active(epoch):
                         cap[:, list(ev.links)] *= np.float32(ev.scale)
-                cap_seg = campaign.seg_steps(n_steps)
+                # adaptive dt: align the segment stride to the scan-chunk
+                # grid so no chunk straddles a capacity edge (the quiescence
+                # predicate would refuse to fast-forward it); fixed dt keeps
+                # the PR 6 uniform stride bit-identical
+                K_chunk, _, _ = compact.plan_chunks(cfg, n_steps)
+                cap_seg = campaign.seg_steps(
+                    n_steps, align=K_chunk if cfg.adaptive else 1)
                 loss = campaign.loss_at(topo, epoch)
                 # congestion reporting sees the epoch's WORST capacity: a
                 # link that flapped at all this epoch reads as degraded
@@ -690,6 +698,7 @@ def run_cosim(
                 reports_admitted=n_admitted,
                 reports_stale=n_stale,
                 reports_duplicate=n_dup,
+                ff_steps=int(getattr(result, "ff_steps", 0)),
             )
             records.append(rec)
             plans.append(run_plan)

@@ -85,6 +85,7 @@ class CompactState(NamedTuple):
     cnp_pkts: jax.Array  # f32 scalar
     spill_steps: jax.Array  # i32 — steps where an arrived flow found no slot
     step: jax.Array  # i32
+    ff_steps: jax.Array  # i32 — steps advanced by quiescence fast-forward
     cache: SlotCache
 
 
@@ -95,6 +96,7 @@ class CompactResult(NamedTuple):
     cnp_pkts: np.ndarray  # f32 scalar
     spill_steps: int
     window_slots: int = 0  # W the (final) run used
+    ff_steps: int = 0  # dt steps covered by closed-form fast-forward
 
 
 def max_concurrency_bound(
@@ -200,6 +202,7 @@ def init_compact_state(
         cnp_pkts=jnp.zeros((), jnp.float32),
         spill_steps=jnp.zeros((), jnp.int32),
         step=jnp.zeros((), jnp.int32),
+        ff_steps=jnp.zeros((), jnp.int32),
         cache=cache,
     )
 
@@ -530,8 +533,114 @@ def build_compact_sim(topo: Topology, cfg: SimConfig, trace_arrays, W: int, F_pa
         )
         return new_state, out
 
+    # ---------------- event-driven adaptive dt (DESIGN.md §15) ----------
+    uplink_ids = jnp.asarray(topo.uplink_ids)
+    s_win = cfg.uplink_sample_every
+
+    def quiesce_phase(state: CompactState, span: int):
+        """Quiescence predicate for a ``span``-step macro-step starting at
+        ``state.step``: True iff every one of those steps is provably
+        reproducible in closed form, i.e. (a) no flow arrives inside the
+        span (so admission is an exact no-op, spill counter included — a
+        spill backlog implies the next unadmitted arrival is already in
+        the past, which fails this check), (b) the capacity-schedule row is
+        constant across the span, and (c) the fabric is either fully idle
+        (stale slots offer exact +0.0; marks may exist but nothing consumes
+        them) or in steady state: every active sub-flow pinned at
+        ``rc == rt == line rate`` (an exact fixed point of the DCQCN
+        recovery branch), no masked queue able to reach the
+        ``ff_kmin_frac * kmin`` ECN margin under the constant offered
+        load, no sub-flow able to finish within ``span + ff_margin_steps``
+        steps (which also keeps the remaining-bytes rc cap non-binding),
+        and — for the flowlet schemes — no occupied slot at a flowlet gap
+        (so the per-step reroute keeps every path fixed).  DRILL's spray
+        weights depend on instantaneous queues, so it only fast-forwards
+        idle spans.
+
+        Returns the boolean alone.  The steady-state checks cost one hop
+        cascade, so they hide behind a ``lax.cond`` on the O(1) arrival and
+        capacity-edge checks: event-dense chunks (every chunk of a loaded
+        Poisson trace) pay two scalar compares and nothing else, and only
+        plausibly quiescent boundaries pay the ~1/span cascade."""
+        t_end = (state.step + span).astype(jnp.float32) * cfg.dt
+        nxt = arrivals[jnp.clip(state.admitted, 0, F_pad - 1)]
+        p_arr = (state.admitted >= n_valid_total) | (nxt >= t_end)
+        if capacity is not None and jnp.asarray(capacity).ndim == 2:
+            r0 = jnp.minimum(state.step // seg, Kseg - 1)
+            r1 = jnp.minimum((state.step + span - 1) // seg, Kseg - 1)
+            p_cap = r0 == r1
+        else:
+            p_cap = jnp.bool_(True)
+
+        def steady_or_idle(st: CompactState):
+            occupied = st.slot_fid < F_pad
+            idle = ~jnp.any(occupied)
+            if cfg.scheme == "drill":
+                return idle
+            arrival, _, _, _, _, rc, active = cascade_phase(st)
+            capv = cap_of(st.step)
+            delta = (arrival - capv) * (cfg.dt / 8.0)
+            q_hi = jnp.maximum(st.queue, st.queue + delta * span) * qmask
+            p_q = jnp.all(q_hi[:nl] < cfg.ff_kmin_frac * dparams.kmin_bytes)
+            margin = span + max(cfg.ff_margin_steps, 1)
+            need = rc * (margin * cfg.dt / 8.0) + DONE_EPS_BYTES
+            p_fin = jnp.all(jnp.where(active, st.remaining > need, True))
+            p_cc = jnp.all(jnp.where(
+                active,
+                (st.cc.rc == line_rate) & (st.cc.rt == line_rate),
+                True,
+            ))
+            steady = p_q & p_fin & p_cc
+            if cfg.scheme in ("letflow", "conga"):
+                gap = baselines.flowlet_gap_occurs(
+                    st.cc.rc[:, 0], dparams.mtu_bytes, cfg.flowlet_timeout)
+                steady &= ~jnp.any(gap & occupied)
+            return idle | steady
+
+        return jax.lax.cond(
+            p_arr & p_cap, steady_or_idle, lambda st: jnp.bool_(False), state)
+
+    def fast_forward_phase(state: CompactState, span: int):
+        """Advance ``span`` steps in closed form — valid exactly when
+        ``quiesce_phase(state, span)`` holds.  Queues follow the analytic
+        clip trajectory, remaining bytes decrement linearly at the frozen
+        delivered rate, DCQCN reduces to timer bookkeeping
+        (dcqcn.fast_forward), and every discrete structure (slots, CQE
+        bitmaps, finish times, congestion table, CNP counter, spill) is
+        untouched.  Step outputs are the frozen per-step values broadcast
+        over the span; the uplink slab is emitted at sample-window
+        granularity directly (a window average of a constant).  Runs its
+        own cascade — one extra hop cascade per fast-forwarded macro-step,
+        amortised over the ``span`` scanned steps it replaces."""
+        arrival, _, thr, _, _, _, active = cascade_phase(state)
+        capv = cap_of(state.step)
+        q_final, mq_traj = dataplane.queue_fast_forward(
+            state.queue, arrival, capv, qmask,
+            dt=cfg.dt, n_steps=span, qmax_bytes=cfg.qmax_bytes, n_links=nl,
+        )
+        delivered = thr * (span * cfg.dt / 8.0)
+        remaining = jnp.maximum(
+            state.remaining - jnp.where(active, delivered, 0.0), 0.0)
+        cc = dcqcn_mod.fast_forward(state.cc, active, span, cfg.dt, dparams)
+        new_state = state._replace(
+            remaining=remaining, cc=cc, queue=q_final,
+            step=state.step + span, ff_steps=state.ff_steps + span,
+        )
+        up = jnp.broadcast_to(
+            arrival[uplink_ids][None],
+            (span // s_win,) + np.asarray(topo.uplink_ids).shape)
+        outs = StepOutputs(
+            uplink_load=up,
+            goodput_total=jnp.broadcast_to(
+                jnp.sum(jnp.where(active, thr, 0.0)), (span,)),
+            cnp_rate=jnp.zeros((span,), jnp.float32),
+            max_queue=mq_traj,
+        )
+        return new_state, outs
+
     phases = dict(admit=admit_phase, cascade=cascade_phase,
-                  dcqcn=dcqcn_phase, finish=finish_phase)
+                  dcqcn=dcqcn_phase, finish=finish_phase,
+                  quiesce=quiesce_phase, fast_forward=fast_forward_phase)
     return init_state, step_fn, phases
 
 
@@ -539,17 +648,45 @@ def plan_chunks(cfg: SimConfig, n_steps: int) -> tuple[int, int, int]:
     """(K, n_chunks, tail): scan-chunk length (a multiple of the uplink
     sample window, capped at the horizon), full chunks, and leftover steps.
 
-    Prefers a K that divides the horizon (searched down to half the
-    requested chunk size): a nonzero tail needs its own lax.cond'd scan,
-    which compiles the step body a SECOND time — a pure compile-latency
-    tax that a slightly shorter chunk avoids entirely."""
+    Prefers a K that divides the horizon: a nonzero tail needs its own
+    lax.cond'd scan, which compiles the step body a SECOND time — a pure
+    compile-latency tax that a slightly shorter chunk avoids entirely.
+    The search runs from the requested chunk size all the way down to one
+    sample window, so the tail only survives when the sample window itself
+    does not divide the horizon (then no valid K can)."""
     s = cfg.uplink_sample_every
     K0 = max(1, cfg.chunk_steps // s) * s
     K0 = min(K0, max(n_steps, 1))
-    for k in range(K0, max(K0 // 2, 1) - 1, -1):
+    for k in range(K0, 0, -1):
         if k % s == 0 and n_steps % k == 0:
             return k, n_steps // k, 0
     return K0, n_steps // K0, n_steps % K0
+
+
+def event_grid(cfg: SimConfig, n_steps: int, arrivals=None, valid=None,
+               cap_seg_steps: int = 0) -> np.ndarray:
+    """Mandatory step boundaries for one sim, host-side: flow-arrival
+    steps, fault/capacity segment edges, and uplink sample-window
+    boundaries.  The adaptive engine honors this grid by construction —
+    macro-steps are whole scan chunks (K a multiple of the sample window,
+    via ``plan_chunks``), the quiescence predicate refuses any span
+    containing an arrival or a capacity edge, and finishes/ECN crossings
+    are excluded dynamically.  Exposed for planning and for the
+    ``--profile`` quiescence-occupancy report."""
+    edges = [np.array([0, n_steps], np.int64)]
+    if arrivals is not None:
+        a = np.asarray(arrivals, np.float64)
+        if valid is not None:
+            a = a[np.asarray(valid, bool)]
+        a = a[np.isfinite(a)]
+        steps = np.ceil(a / cfg.dt).astype(np.int64)
+        edges.append(steps[(steps >= 0) & (steps <= n_steps)])
+    if cap_seg_steps and cap_seg_steps > 0:
+        edges.append(np.arange(0, n_steps + 1, cap_seg_steps, dtype=np.int64))
+    if cfg.uplink_sample_every > 1:
+        edges.append(np.arange(0, n_steps + 1, cfg.uplink_sample_every,
+                               dtype=np.int64))
+    return np.unique(np.concatenate(edges))
 
 
 def run_core(topo: Topology, cfg: SimConfig, W: int, F_pad: int, A: int,
@@ -560,7 +697,7 @@ def run_core(topo: Topology, cfg: SimConfig, W: int, F_pad: int, A: int,
              gate_admission: bool = False):
     """Jit-friendly core: sorted/padded trace arrays + a donatable +inf
     finish buffer in, (finish[F_pad] in sorted order, cnp_pkts, spill_steps,
-    per-step outputs) out.  Wrapped and cached by netsim/sweep.py;
+    ff_steps, per-step outputs) out.  Wrapped and cached by netsim/sweep.py;
     vmap-able over a leading batch axis of (trace_arrays, finish0).
     ``capacity`` (f32[n_links + 1], or a wall-clock schedule
     f32[K, n_links + 1] stepped every ``cap_seg_steps`` — static — steps)
@@ -578,11 +715,23 @@ def run_core(topo: Topology, cfg: SimConfig, W: int, F_pad: int, A: int,
     horizon) skip 30-50 % of steps this way.  With
     ``cfg.uplink_sample_every > 1`` the uplink trace is window-averaged
     inside the chunk before it is written out, so only ``[T/s, L, S]`` is
-    ever materialized."""
-    _, step_fn, _ = build_compact_sim(topo, cfg, trace_arrays, W, F_pad, A,
-                                      gate_admission=gate_admission,
-                                      capacity=capacity, loss=loss,
-                                      cap_seg_steps=cap_seg_steps)
+    ever materialized.
+
+    With ``cfg.adaptive`` every chunk boundary additionally evaluates the
+    quiescence predicate and a ``lax.cond`` fast-forwards the whole
+    macro-step (``cfg.ff_macro_chunks`` chunks) in closed form when it
+    holds — the event grid (arrivals, capacity segment edges, sample
+    windows; see ``event_grid``) is respected by construction because
+    macro-steps are chunk-aligned and the predicate refuses spans
+    containing an event.  The cond is a REAL branch exactly on the
+    un-vmapped dispatch paths (B=1 / one-sim-per-device), which is where
+    the sweep runner lands on CPU; under vmap it lowers to
+    both-branches-plus-select and saves nothing.  ``adaptive=False``
+    traces the identical step loop as before (bit-identical results)."""
+    _, step_fn, phases = build_compact_sim(topo, cfg, trace_arrays, W, F_pad,
+                                           A, gate_admission=gate_admission,
+                                           capacity=capacity, loss=loss,
+                                           cap_seg_steps=cap_seg_steps)
     init = init_compact_state(topo, cfg, W, F_pad, finish0, capacity=capacity)
     n_valid = jnp.sum(jnp.asarray(trace_arrays[5]).astype(jnp.int32))
     nl = topo.n_links
@@ -622,11 +771,39 @@ def run_core(topo: Topology, cfg: SimConfig, W: int, F_pad: int, A: int,
                 up, slab, (k0 // s,) + (0,) * len(uplink_shape))
         return st2, StepOutputs(up, gp, cn, mq)
 
+    if cfg.adaptive:
+        macro = K * cfg.ff_macro_chunks
+        horizon = n_chunks * K
+        quiesce, fast_forward = phases["quiesce"], phases["fast_forward"]
+
+        def body(c):
+            st, outs = c
+            quiet = quiesce(st, macro) & ((st.step + macro) <= horizon)
+
+            def do_ff(c2):
+                st0, o0 = c2
+                k0 = st0.step
+                st2, o = fast_forward(st0, macro)
+                gp = jax.lax.dynamic_update_slice(
+                    o0.goodput_total, o.goodput_total, (k0,))
+                cn = jax.lax.dynamic_update_slice(o0.cnp_rate, o.cnp_rate, (k0,))
+                mq = jax.lax.dynamic_update_slice(o0.max_queue, o.max_queue, (k0,))
+                up = jax.lax.dynamic_update_slice(
+                    o0.uplink_load, o.uplink_load,
+                    (k0 // s,) + (0,) * len(uplink_shape))
+                return st2, StepOutputs(up, gp, cn, mq)
+
+            return jax.lax.cond(
+                quiet, do_ff, lambda c2: run_block(c2[0], c2[1], K), c)
+    else:
+        def body(c):
+            return run_block(c[0], c[1], K)
+
     carry = (init, outs0)
     if n_chunks:
         carry = jax.lax.while_loop(
             lambda c: (c[0].step < n_chunks * K) & alive(c[0]),
-            lambda c: run_block(c[0], c[1], K),
+            body,
             carry,
         )
     if tail:  # horizon not divisible by K: one short block, same early exit
@@ -637,7 +814,7 @@ def run_core(topo: Topology, cfg: SimConfig, W: int, F_pad: int, A: int,
             carry,
         )
     final, outs = carry
-    return final.finish, final.cnp_pkts, final.spill_steps, outs
+    return final.finish, final.cnp_pkts, final.spill_steps, final.ff_steps, outs
 
 
 def sort_trace(trace: Trace) -> tuple[tuple, np.ndarray, int]:
@@ -695,7 +872,7 @@ def simulate_compact(
     if window_slots is not None:  # explicit window: honor it exactly
         W = max(8, min(int(window_slots), F_pad))  # (tests probe spill)
     n_steps = int(round(cfg.duration_s / cfg.dt))
-    finish, cnp, spill, outs = _run_single(
+    finish, cnp, spill, ff, outs = _run_single(
         topo, cfg, W, F_pad, A, n_steps, tuple(jnp.asarray(a) for a in arrays),
         jnp.full((F_pad,), jnp.inf, jnp.float32),
     )
@@ -704,5 +881,6 @@ def simulate_compact(
         cnp_pkts=np.asarray(cnp),
         spill_steps=int(spill),
         window_slots=W,
+        ff_steps=int(ff),
     )
     return res, outs

@@ -312,6 +312,38 @@ def integrate_queue(
     return new_queue, p_mark
 
 
+def queue_fast_forward(
+    queue: jax.Array,  # f32[n_links + 1]
+    arrival: jax.Array,  # f32[n_links + 1] offered bps, constant over the span
+    capacity: jax.Array,  # f32[n_links + 1]
+    queue_mask: jax.Array,  # f32[n_links + 1]
+    *,
+    dt: float,
+    n_steps: int,  # static span length
+    qmax_bytes: float,
+    n_links: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Analytic ``n_steps``-step queue trajectory under CONSTANT arrivals.
+
+    The per-step update ``q <- clip(q + delta, 0, qmax) * mask`` with a
+    constant ``delta = (arrival - capacity) * dt/8`` is monotone in the
+    step count, so clipping commutes with accumulation and step ``m`` is
+    exactly ``clip(q0 + m*delta, 0, qmax) * mask`` (modulo f32 rounding of
+    the product vs the iterated sum).  Used by the compact engine's
+    quiescence fast-forward (DESIGN.md §15), whose predicate additionally
+    guarantees no masked queue crosses the ECN kmin margin mid-span.
+
+    Returns ``(q_final[n_links+1], max_queue_traj[n_steps])`` where the
+    trajectory entry ``m`` is the max over real links after ``m+1`` steps
+    (matching the per-step ``max_queue`` StepOutputs channel).
+    """
+    delta = (arrival - capacity) * (dt / 8.0)
+    m = jnp.arange(1, n_steps + 1, dtype=jnp.float32)[:, None]
+    traj = jnp.clip(queue[None, :] + m * delta[None, :], 0.0, qmax_bytes)
+    traj = traj * queue_mask[None, :]
+    return traj[-1], jnp.max(traj[:, :n_links], axis=1)
+
+
 # ------------------------------------------------------------------ DRILL
 def drill_spray(
     topo: Topology,

@@ -20,6 +20,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 
@@ -119,3 +120,47 @@ def step(
     # inactive sub-flows hold full rate so they start at line rate
     new = jax.tree.map(lambda a, b: jnp.where(active, a, b), new, state)
     return new, e
+
+
+def fast_forward(
+    state: DCQCNState,
+    active: jax.Array,  # bool[...]
+    n_steps: jax.Array | int,  # number of dt steps to advance
+    dt: float,
+    p: DCQCNParams,
+) -> DCQCNState:
+    """Advance ``n_steps`` fixed-dt steps in closed form — zero marks only.
+
+    Valid under the compact engine's quiescence predicate (DESIGN.md §15):
+    every hop's mark probability is zero for the whole span and every
+    active sub-flow sits pinned at ``rc == rt == line rate``.  Then the
+    per-step update reduces to pure timer bookkeeping — rc/rt are exact
+    fixed points of the recovery branch, alpha decays geometrically, the
+    rate timer is periodic, and recovery-stage increments are no-ops until
+    the next CNP resets them — so ``n`` scan iterations collapse to O(1).
+    Inactive sub-flows hold state exactly, as in :func:`step`.
+    """
+    n = jnp.asarray(n_steps, jnp.float32)
+    decay = jnp.float32(1.0 - p.g) ** jnp.float32(dt / p.alpha_interval)
+    alpha = state.alpha * decay**n
+    # the rate timer climbs dt per step and resets to 0 on crossing
+    # rate_interval: first event at m1 = max(ceil((I - t0)/dt), 1), then
+    # every P = ceil(I/dt) steps; final timer value is the residual.
+    period = jnp.float32(np.ceil(p.rate_interval / dt))
+    m1 = jnp.maximum(jnp.ceil((p.rate_interval - state.t_since_rate) / dt), 1.0)
+    fired = n >= m1
+    events = jnp.where(fired, 1.0 + jnp.floor((n - m1) / period), 0.0)
+    t_rate = jnp.where(
+        fired,
+        jnp.mod(n - m1, period) * jnp.float32(dt),
+        state.t_since_rate + n * jnp.float32(dt),
+    )
+    new = DCQCNState(
+        rc=state.rc,
+        rt=state.rt,
+        alpha=alpha,
+        t_since_cnp=state.t_since_cnp + n * jnp.float32(dt),
+        t_since_rate=t_rate,
+        recovery_stage=state.recovery_stage + events,
+    )
+    return jax.tree.map(lambda a, b: jnp.where(active, a, b), new, state)

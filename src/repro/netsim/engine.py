@@ -77,11 +77,29 @@ class SimConfig:
     # materializing the full per-step trace.  1 = keep every step (exact
     # dense-engine layout).
     uplink_sample_every: int = 1
+    # compact engine only: event-driven adaptive dt (DESIGN.md §15).  When
+    # True, each chunk boundary evaluates a quiescence predicate (no
+    # arrival / finish / capacity edge / ECN crossing possible inside the
+    # macro-step, DCQCN pinned at line rate) and a lax.cond fast-forwards
+    # the whole macro-step in closed form instead of scanning it.  False
+    # keeps the step loop bit-identical to the fixed-dt engine.
+    adaptive: bool = False
+    # macro-step cap, in scan chunks: the fast-forward span is
+    # ff_macro_chunks * chunk_steps worth of dt steps (chunk boundaries are
+    # the event grid, so spans stay chunk-aligned).  1 = one chunk.
+    ff_macro_chunks: int = 1
+    # quiescence margins: queues must stay below ff_kmin_frac * kmin for
+    # the whole span (conservative headroom under the ECN ramp), and no
+    # active sub-flow may finish within span + ff_margin_steps steps.
+    ff_kmin_frac: float = 0.9
+    ff_margin_steps: int = 2
 
     def __post_init__(self):
         assert self.scheme in SCHEMES, self.scheme
         assert self.dataplane in ("auto", "xla", "pallas", "pallas_interpret")
         assert self.chunk_steps >= 1 and self.uplink_sample_every >= 1
+        assert self.ff_macro_chunks >= 1 and self.ff_margin_steps >= 0
+        assert 0.0 < self.ff_kmin_frac <= 1.0
         if self.scheme != "seqbalance":
             object.__setattr__(self, "n_sub", 1)
 

@@ -231,10 +231,18 @@ class FaultCampaign:
                 f"duplicate campaign event (kind, links, window): {key}"
             seen.add(key)
 
-    def seg_steps(self, n_steps: int) -> int:
+    def seg_steps(self, n_steps: int, align: int = 1) -> int:
         """Steps per capacity-schedule segment (the static stride the
-        compact engine indexes the schedule with)."""
-        return max(1, -(-int(n_steps) // self.n_segments))
+        compact engine indexes the schedule with).  ``align`` rounds the
+        stride UP to a multiple of the engine's scan-chunk length: with
+        adaptive dt the chunk grid IS the event grid, and an aligned
+        stride means no chunk ever straddles a capacity segment edge —
+        the quiescence predicate's capacity check then never blocks a
+        fast-forward mid-segment.  ``align=1`` (default) keeps the PR 6
+        uniform stride bit-identical."""
+        base = max(1, -(-int(n_steps) // self.n_segments))
+        a = max(int(align), 1)
+        return -(-base // a) * a
 
     def capacity_schedule(self, topo, epoch: int) -> np.ndarray:
         """f32[n_segments, n_links + 1] — this epoch's wall-clock capacity

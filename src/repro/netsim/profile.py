@@ -7,6 +7,12 @@ The compact step is composed of four phase closures (netsim/compact.py
   cascade — offered rates -> NIC-tiered hop cascade -> queue/ECN marks
   dcqcn   — per-sub-flow rate control update
   finish  — transfer progress, bitmap CQE, scatter-on-finish, table update
+  quiesce — adaptive-dt quiescence predicate (one chunk-boundary check)
+
+``quiescence_profile`` additionally replays a fixed-dt run chunk by chunk
+and records which chunk boundaries the adaptive engine would have
+fast-forwarded — the quiescence occupancy (fraction of the horizon
+coverable in closed form) and the macro-step length histogram.
 
 Each phase is jitted and timed IN ISOLATION on a mid-simulation state (the
 same state for every phase, reached by scanning ``warm_steps`` real steps),
@@ -21,6 +27,7 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.netsim import compact
 from repro.netsim.engine import SimConfig
@@ -63,6 +70,8 @@ def profile_phases(
     dcqcn = jax.jit(phases["dcqcn"])
     finish = jax.jit(phases["finish"])
     step = jax.jit(step_fn)
+    K, _, _ = compact.plan_chunks(cfg, int(round(cfg.duration_s / cfg.dt)))
+    quiesce = jax.jit(lambda s: phases["quiesce"](s, K))
 
     st_admit = jax.block_until_ready(admit(st))
     arrival, new_queue, thr, p_sub, p_fab, rc, active = cascade(st_admit)
@@ -74,7 +83,64 @@ def profile_phases(
         "finish": _time_us(
             finish, st_admit, t, thr, active, rc, p_fab, iters=iters),
         "step_fused": _time_us(step, st, iters=iters),
+        "quiesce": _time_us(quiesce, st, iters=iters),
     }
     out["phase_sum"] = sum(out[k] for k in ("admit", "cascade", "dcqcn", "finish"))
     out["window_slots"] = W
     return out
+
+
+def quiescence_profile(
+    topo: Topology, cfg: SimConfig, trace: Trace, *, iters: int = 30,
+) -> dict:
+    """Quiescence occupancy of one sim: replay the fixed-dt trajectory in
+    scan chunks, evaluating the adaptive engine's predicate at every chunk
+    boundary (without fast-forwarding, so the trajectory stays the exact
+    oracle).  Returns:
+
+      ff_fraction   — fraction of the horizon whose chunks were quiescent
+                      (what adaptive mode would cover in closed form)
+      macro_hist    — {macro-step length in dt steps: count} from runs of
+                      consecutive quiescent chunks
+      predicate_us  — one predicate evaluation, jitted in isolation (the
+                      per-chunk overhead adaptive mode pays on top of the
+                      scan)
+      chunk_steps / n_chunks — the event-grid geometry used
+    """
+    arrays, _, F = compact.sort_trace(trace)
+    F_pad = max(F, 1)
+    W, A = compact.plan_single_window(topo, cfg, arrays, F_pad)
+    jarrays = tuple(jnp.asarray(a) for a in arrays)
+    _, step_fn, phases = compact.build_compact_sim(topo, cfg, jarrays, W,
+                                                   F_pad, A)
+    n_steps = int(round(cfg.duration_s / cfg.dt))
+    K, n_chunks, _ = compact.plan_chunks(cfg, n_steps)
+    quiesce = phases["quiesce"]
+
+    @jax.jit
+    def replay(st):
+        def one(st, _):
+            quiet = quiesce(st, K)
+            st2, _ = jax.lax.scan(step_fn, st, None, length=K)
+            return st2, quiet
+
+        return jax.lax.scan(one, st, None, length=n_chunks)[1]
+
+    st0 = compact.init_compact_state(topo, cfg, W, F_pad)
+    quiet = np.asarray(jax.block_until_ready(replay(st0)))
+    hist: dict[int, int] = {}
+    run = 0
+    for q in list(quiet) + [False]:  # trailing False flushes the last run
+        if q:
+            run += 1
+        elif run:
+            hist[run * K] = hist.get(run * K, 0) + 1
+            run = 0
+    pred = jax.jit(lambda s: quiesce(s, K))
+    return {
+        "ff_fraction": float(quiet.mean()) if quiet.size else 0.0,
+        "macro_hist": hist,
+        "predicate_us": _time_us(pred, st0, iters=iters),
+        "chunk_steps": K,
+        "n_chunks": n_chunks,
+    }

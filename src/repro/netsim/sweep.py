@@ -314,8 +314,8 @@ def batch_mode() -> str:
 
 def _dispatch(topo, cfg, W, F_pad, A, n_steps, stacked, B, capacity=None,
               loss=None, cap_seg_steps=0):
-    """Run a stacked [B, ...] batch, returning (finish, cnp, spill, outs)
-    with a leading [B] axis.  >1 local device: pad B up to a multiple of
+    """Run a stacked [B, ...] batch, returning (finish, cnp, spill,
+    ff_steps, outs) with a leading [B] axis.  >1 local device: pad B up to a multiple of
     the device count (duplicating the last row — padding results are
     sliced off) and run one pmap-of-vmap, one batch shard per device.
     Single device: per-sim B=1 executions (cpu) or one jitted vmap — see
@@ -397,12 +397,13 @@ def _run_group(topo, cfg, prepped, n_steps, window_slots, capacity=None,
             np.stack([padded[i][k] for i in pending]) for k in range(6)
         )
         t0 = time.time()
-        finish, cnp, spill, outs = _dispatch(
+        finish, cnp, spill, ff, outs = _dispatch(
             topo, cfg, W, F_pad, A, n_steps, stacked, len(pending), capacity,
             loss, cap_seg_steps)
         spill = np.asarray(spill)
         finish = np.asarray(finish)
         cnp = np.asarray(cnp)
+        ff = np.asarray(ff)
         if os.environ.get("REPRO_SWEEP_DEBUG"):
             print(f"# sweep {cfg.scheme} B={len(pending)} F_pad={F_pad} W={W} "
                   f"A={A} spill={spill.tolist()} wall={time.time()-t0:.1f}s",
@@ -414,6 +415,7 @@ def _run_group(topo, cfg, prepped, n_steps, window_slots, capacity=None,
                 results[i] = compact.CompactResult(
                     finish=finish[b, :F][inv], cnp_pkts=cnp[b],
                     spill_steps=int(spill[b]), window_slots=W,
+                    ff_steps=int(ff[b]),
                 )
                 outs_list[i] = jax.tree.map(lambda a, b=b: a[b], outs)
             else:
