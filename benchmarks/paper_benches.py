@@ -479,7 +479,13 @@ def bench_profile_phases(fast=True, schemes=("seqbalance", "ecmp")):
     for scheme in schemes:
         cfg = SimConfig(scheme=scheme, duration_s=arr * 4)
         times = profile.profile_phases(topo, cfg, trace)
-        record[scheme] = {k: round(v, 2) for k, v in times.items()}
+        # TimeUs phases carry the full sample distribution: store
+        # {min_us, mean_us, std_us, iters} per phase (flight-log schema),
+        # plain floats/ints (phase_sum, window_slots) stay scalar
+        record[scheme] = {
+            k: v.stats() if isinstance(v, profile.TimeUs)
+            else (round(v, 2) if isinstance(v, float) else v)
+            for k, v in times.items()}
         for phase in ("admit", "cascade", "dcqcn", "finish"):
             emit(f"profile_{scheme}_{phase}", times[phase],
                  f"{times[phase]/max(times['phase_sum'],1e-9)*100:.0f}%_of_phase_sum")
@@ -501,9 +507,11 @@ def bench_profile_phases(fast=True, schemes=("seqbalance", "ecmp")):
         emit(f"profile_quiescence_{name}", q["predicate_us"],
              f"ff_fraction_{q['ff_fraction']:.3f}_macro_hist_{hist or 'none'}"
              f"_K_{q['chunk_steps']}")
+        pred = q["predicate_us"]
         record[f"quiescence_{name}"] = dict(
             ff_fraction=round(q["ff_fraction"], 4),
-            predicate_us=round(q["predicate_us"], 2),
+            predicate_us=pred.stats() if isinstance(pred, profile.TimeUs)
+            else round(pred, 2),
             macro_hist={str(k): v for k, v in sorted(q["macro_hist"].items())},
             chunk_steps=q["chunk_steps"], n_chunks=q["n_chunks"])
     PERF["profile"] = record

@@ -31,10 +31,11 @@ def main() -> None:
     from benchmarks.bench_cosim import bench_cosim, bench_faults, \
         bench_telemetry
     from benchmarks.bench_kernels import bench_kernels
+    from benchmarks.bench_obs import bench_obs
 
     benches = list(paper_benches.ALL) + [bench_collectives, bench_kernels,
                                          bench_cosim, bench_faults,
-                                         bench_telemetry]
+                                         bench_telemetry, bench_obs]
     if args.profile:
         benches.append(paper_benches.bench_profile_phases)
     print("name,us_per_call,derived")
@@ -51,9 +52,18 @@ def main() -> None:
     print(f"# total_wall_s,{wall:.1f},", flush=True)
 
     if args.json:
+        from repro import obs
+
         record = dict(common.PERF)
         record["total_wall_s"] = round(wall, 1)
         record["rows"] = common.ROWS
+        # provenance stamp on the file AND every dict section, so sections
+        # merged across runs/machines stay individually attributable
+        meta = obs.runmeta()
+        for sec in record.values():
+            if isinstance(sec, dict):
+                sec.setdefault("runmeta", meta)
+        record["runmeta"] = meta
         try:
             with open(args.json, "w") as f:
                 json.dump(record, f, indent=2)

@@ -321,6 +321,57 @@ def check_adaptive(new: dict | None, base: dict | None,
     return 0 if ok else 1
 
 
+def check_obs(new: dict | None, base: dict | None) -> int:
+    """Observability gate (BENCH_netsim.json["obs"], DESIGN.md §16):
+
+      * warm per-dispatch recording overhead <= the BASELINE's
+        ``max_overhead_pct`` floor (5% at introduction) — the traced ring
+        buffer must stay effectively free;
+      * zero executable-cache builds after the recorder's first warm
+        dispatch of a shape (recording may never trigger a recompile);
+      * the killed-agg-spine co-sim flight log covered EVERY epoch, every
+        epoch carried an in-sim drain, and the campaign summed to zero
+        new builds after epoch 0."""
+    if not new:
+        print("FAIL: new record has no obs entry (did --only obs run?)")
+        return 1
+    ok = True
+    floors = (base or {}).get("floors") or new.get("floors") or {}
+    if not (base or {}).get("floors"):
+        print("WARN: baseline has no obs floors; using the fresh record's own")
+    limit = floors.get("max_overhead_pct", 5.0)
+    ov = new.get("overhead_pct", float("inf"))
+    verdict = "OK" if ov <= limit else "FAIL"
+    ok &= ov <= limit
+    print(f"{verdict}: recording overhead {ov:+.2f}% (limit {limit}%)")
+    if ov > limit:
+        print("      note: overhead is wall-clock-relative; on a loaded or "
+              "unrelated machine set REPRO_CI_SKIP_BENCH_GATE=1")
+
+    rb = new.get("rebuilds_warm", 0)
+    verdict = "OK" if rb == 0 else "FAIL"
+    ok &= rb == 0
+    print(f"{verdict}: rebuilds after warm recorded dispatch {rb}")
+
+    cs = new.get("cosim") or {}
+    cover = cs.get("flight_epochs", -1) == cs.get("epochs", -2)
+    verdict = "OK" if cover else "FAIL"
+    ok &= cover
+    print(f"{verdict}: flight log covered {cs.get('flight_epochs')}/"
+          f"{cs.get('epochs')} cosim epochs")
+
+    insim = bool(cs.get("insim_every_epoch"))
+    verdict = "OK" if insim else "FAIL"
+    ok &= insim
+    print(f"{verdict}: in-sim drain on every epoch record: {insim}")
+
+    rb0 = cs.get("rebuilds_after_epoch0", -1)
+    verdict = "OK" if rb0 == 0 else "FAIL"
+    ok &= rb0 == 0
+    print(f"{verdict}: cosim rebuilds after epoch 0: {rb0}")
+    return 0 if ok else 1
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("new", help="fresh bench JSON (the run under test)")
@@ -340,6 +391,10 @@ def main() -> int:
                     help="gate the adaptive-dt record (stat divergence vs "
                          "fixed dt, speedup floors, fast-forward engaged, "
                          "zero rebuilds) instead of the fig12 sweep")
+    ap.add_argument("--obs", action="store_true",
+                    help="gate the observability record (recording overhead "
+                         "floor, zero recorder rebuilds, full flight-log "
+                         "epoch coverage) instead of the fig12 sweep")
     ap.add_argument("--telemetry", action="store_true",
                     help="gate the degraded-telemetry rows (perfect-channel "
                          "bit-identity, lossy/delayed reconvergence, plan-"
@@ -354,6 +409,13 @@ def main() -> int:
             base_a = json.load(f).get("adaptive_dt")
         return check_adaptive(new_a, base_a,
                               max_stat_diff=args.max_stat_diff)
+
+    if args.obs:
+        with open(args.new) as f:
+            new_o = json.load(f).get("obs")
+        with open(args.baseline) as f:
+            base_o = json.load(f).get("obs")
+        return check_obs(new_o, base_o)
 
     if args.telemetry:
         with open(args.new) as f:

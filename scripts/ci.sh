@@ -182,3 +182,49 @@ if [ -z "${REPRO_CI_SKIP_BENCH_GATE:-}" ]; then
   python scripts/check_bench.py /tmp/BENCH_adaptive.json BENCH_netsim.json \
     --adaptive
 fi
+
+# observability smoke on the forced 8-device platform: a 2-epoch recorded
+# co-sim must produce a schema-v2 flight log covering both epochs (with
+# the in-sim ring-buffer drain on each), export to a perfetto-loadable
+# Chrome trace, and round-trip through the [epoch, uplink, feature]
+# matrix — while staying bit-identical to the unrecorded driver and
+# building ZERO executables after epoch 0.
+XLA_FLAGS="--xla_force_host_platform_device_count=8" python - <<'EOF4'
+import json, os, tempfile
+from repro import obs
+from repro.dist import cosim
+from repro.netsim import topology
+
+topo = topology.leaf_spine(4, 4, 4, 100e9)
+hosts = cosim.ring_hosts(topo, 8)
+kw = dict(scheme="ecmp", epochs=2, phi_steps=2, n_chunks=4, seed=0,
+          faults=(cosim.kill_spine(topo, 2, epoch=1),))
+fd, fl = tempfile.mkstemp(suffix=".jsonl"); os.close(fd)
+tr_path = fl + ".trace.json"
+h0 = cosim.run_cosim(topo, hosts, 4e6, **kw)
+h1 = cosim.run_cosim(topo, hosts, 4e6, record=obs.RecordSpec(ring_chunks=32),
+                     flight=fl, **kw)
+assert [r.fct_p99_s for r in h0.records] == [r.fct_p99_s for r in h1.records]
+assert sum(r.new_builds for r in h1.records[1:]) == 0
+header, recs = obs.read_flight(fl)
+eps = [r for r in recs if r["kind"] == "epoch"]
+assert len(eps) == 2 and all(r.get("insim") for r in eps), eps
+from repro.obs import trace_export
+from repro.obs.features import epoch_matrix
+trace = trace_export.export_chrome_trace(fl, tr_path)
+assert len(json.load(open(tr_path))["traceEvents"]) == len(trace["traceEvents"])
+m = epoch_matrix((header, recs))
+assert m["matrix"].shape == (2, topo.uplink_ids.size, len(m["features"]))
+os.unlink(fl); os.unlink(tr_path)
+print(f"obs smoke: 2-epoch flight log, {len(trace['traceEvents'])} trace "
+      f"events, matrix {m['matrix'].shape}, driver bit-identical, 0 rebuilds")
+EOF4
+
+# observability gate: rerun the obs bench and fail if warm recording
+# overhead exceeds the committed floor (5%), if the recorder rebuilt an
+# executable after its first dispatch, or if the killed-agg-spine flight
+# log missed an epoch / its in-sim drain.
+if [ -z "${REPRO_CI_SKIP_BENCH_GATE:-}" ]; then
+  python -m benchmarks.run --only obs --json /tmp/BENCH_obs.json
+  python scripts/check_bench.py /tmp/BENCH_obs.json BENCH_netsim.json --obs
+fi

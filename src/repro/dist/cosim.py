@@ -35,6 +35,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
+import time
 
 import numpy as np
 
@@ -142,6 +143,8 @@ class EpochRecord:
     reports_duplicate: int = -1  # duplicated deliveries (idempotently dropped)
     # --- adaptive-dt observables (0 = fixed dt or nothing fast-forwarded)
     ff_steps: int = 0  # dt steps the quiescence fast-forward covered
+    # --- in-sim recorder drain (None = no RecordSpec passed to run_cosim)
+    insim: dict | None = None  # obs.epoch_summary of the epoch's ring buffer
 
 
 @dataclasses.dataclass
@@ -344,6 +347,8 @@ def run_cosim(
     telemetry=None,
     staleness_bound: int | None = None,
     blackout_epochs: int = 3,
+    record=None,
+    flight=None,
     **cfg_kw,
 ) -> CosimHistory:
     """Run ``epochs`` plan -> sim -> health cycles over a fault schedule.
@@ -411,6 +416,26 @@ def run_cosim(
         ECMP five-tuple hashing; same trace shapes, so the compiled
         program is reused) instead of steering on stale quarantines — and
         one admissible delivery after the channel heals flips it back.
+
+    Observability extensions (DESIGN.md §16; both default off and change
+    nothing when unused):
+
+      * ``record`` (an ``obs.RecordSpec``) threads the traced in-sim ring
+        buffer through every epoch's sim: the recorder costs exactly ONE
+        extra executable per shape bucket (built at epoch 0, zero rebuilds
+        after), the drained per-chunk summaries land on
+        ``EpochRecord.insim`` via ``obs.epoch_summary``, and the spec
+        joins the journal's ``spec_key`` so a resumed campaign can't mix
+        recorded and unrecorded epochs.
+      * ``flight`` (a path, or an open ``obs.FlightLog``) appends one
+        schema-v2 JSONL event per epoch — wall-clock span, FCT stats,
+        plan/quarantine/watchdog/telemetry state, sweep build + resilience
+        counters, hot uplinks, fault activations, and the in-sim drain —
+        plus a leading ``campaign`` event and a trailing ``run_end`` with
+        the convergence verdict.  ``obs.trace_export`` renders the file as
+        a perfetto timeline; ``obs.features.epoch_matrix`` lifts it into
+        [epoch, uplink, feature] arrays.  A path is opened/closed by this
+        call; an instance is shared (caller closes).
     """
     from repro.dist import collectives
     from repro.netsim import compact, metrics, sweep, workloads
@@ -465,6 +490,13 @@ def run_cosim(
         staleness_bound=staleness_bound,
         blackout_epochs=blackout_epochs if telemetry is not None else None,
     )
+    if record is not None:
+        # JSON-normalized (lists, not tuples) so a resumed journal's loaded
+        # spec compares equal; absent entirely when unused so legacy
+        # journals written before the recorder existed still match
+        spec_key["record"] = dict(
+            ring_chunks=int(record.ring_chunks),
+            quantiles=[float(q) for q in record.quantiles])
     journal_fh = None
     if journal is not None:
         import json
@@ -497,11 +529,32 @@ def run_cosim(
             journal_fh.write(json.dumps(st) + "\n")
         journal_fh.flush()
 
+    # ---------------- flight log: control-plane event stream (obs plane)
+    fl = None
+    fl_owned = False
+    if flight is not None:
+        from repro.obs import FlightLog
+
+        if isinstance(flight, FlightLog):
+            fl = flight
+        else:
+            fl = FlightLog(flight, meta=dict(spec=spec_key))
+            fl_owned = True
+        fl.event(
+            "campaign", scheme=scheme, epochs=epochs, start_epoch=start_epoch,
+            n_hosts=n, size_bytes=float(size_bytes), n_steps=n_steps,
+            duration_s=duration_s, dt=dt, n_chunks=n_chunks,
+            n_faults=len(faults) + (len(campaign.events)
+                                    if campaign is not None else 0),
+            telemetry=spec_key["telemetry"],
+            record=spec_key.get("record"))
+
     plan = health.plan(start_epoch, n_chunks=n_chunks, wire_dtype=wire_dtype)
     plan_refused = 0
     W = window_slots
     try:
         for epoch in range(start_epoch, epochs):
+            t_ep = time.time()  # epoch wall-clock span for the flight log
             # ------------------------------------- safe-mode plan selection
             # entering state of the watchdog decides THIS epoch's conduct:
             # blind planners don't steer — run everything-active, unsteered
@@ -609,8 +662,13 @@ def run_cosim(
             b0 = sweep.cache_stats()["builds"]
             result, outs = sweep.run_one(topo, cfg, trace, capacity=cap,
                                          loss=loss, cap_seg_steps=cap_seg,
-                                         window_slots=W)
+                                         window_slots=W, record=record)
             new_builds = sweep.cache_stats()["builds"] - b0
+            insim = None
+            if record is not None and getattr(result, "ring", None) is not None:
+                from repro import obs
+
+                insim = obs.epoch_summary(record, obs.drain(record, result.ring))
 
             # ------------------------------------ congestion feedback path
             n_sent = n_delivered = n_admitted = n_stale = n_dup = -1
@@ -699,6 +757,7 @@ def run_cosim(
                 reports_stale=n_stale,
                 reports_duplicate=n_dup,
                 ff_steps=int(getattr(result, "ff_steps", 0)),
+                insim=insim,
             )
             records.append(rec)
             plans.append(run_plan)
@@ -717,14 +776,58 @@ def run_cosim(
                     if watchdog is not None else None,
                 )) + "\n")
                 journal_fh.flush()
+            if fl is not None:
+                fa = list(campaign.activations(epoch)) if campaign else []
+                fa += [dict(kind="FaultEvent", links=list(ev.links),
+                            scale=ev.scale, start_epoch=ev.start_epoch,
+                            end_epoch=ev.end_epoch)
+                       for ev in faults if ev.active(epoch)]
+                fl.event(
+                    "epoch", epoch=epoch, t0_s=t_ep,
+                    dur_s=time.time() - t_ep, n_steps=n_steps,
+                    fct_p50_us=round(rec.fct_p50_s * 1e6, 3),
+                    fct_p99_us=round(rec.fct_p99_s * 1e6, 3),
+                    completion=round(completion, 5),
+                    plan_version=int(run_plan.version), plan_churn=churn,
+                    safe_mode=in_safe, replan_round=replan_round,
+                    quarantined=[int(p) for p in rec.quarantined],
+                    reported_slow=[int(p) for p in rec.reported_slow],
+                    straggler_quarantined=[int(i) for i in strag_quar],
+                    straggler_scale=float(eff),
+                    new_builds=new_builds,
+                    spill_steps=int(result.spill_steps),
+                    ff_steps=rec.ff_steps,
+                    reports=None if telemetry is None else dict(
+                        sent=n_sent, delivered=n_delivered,
+                        admitted=n_admitted, stale=n_stale, duplicate=n_dup),
+                    watchdog=watchdog.state() if watchdog is not None
+                    else None,
+                    sweep=sweep.obs_stats(),
+                    hot_uplinks=netfeed.hot_uplinks(
+                        topo, outs, capacity=cap_report),
+                    faults=fa,
+                    insim=insim,
+                )
             plan = applied
+        hist = CosimHistory(scheme=scheme, phi_steps=phi_steps,
+                            duration_s=duration_s, records=records,
+                            plans=plans, final_plan=plan, health=health,
+                            plan_refused=plan_refused)
+        if fl is not None and records:
+            evs = list(faults) + (list(campaign.events) if campaign else [])
+            fe = min((f.start_epoch for f in evs), default=1)
+            fl.event(
+                "run_end", epochs_run=len(records),
+                convergence_epoch=hist.convergence_epoch(fe),
+                plan_refused=plan_refused,
+                total_new_builds=sum(r.new_builds for r in records),
+                sweep=sweep.obs_stats())
     finally:
         if journal_fh is not None:
             journal_fh.close()
-    return CosimHistory(scheme=scheme, phi_steps=phi_steps,
-                        duration_s=duration_s, records=records, plans=plans,
-                        final_plan=plan, health=health,
-                        plan_refused=plan_refused)
+        if fl is not None and fl_owned:
+            fl.close()
+    return hist
 
 
 def run_cosim_grid(specs: list[dict], *, workers: int | None = None,

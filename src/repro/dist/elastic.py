@@ -189,6 +189,9 @@ class TelemetryWatchdog:
         assert self.blackout_epochs >= 1, self.blackout_epochs
         self._silent = 0
         self._safe = False
+        # verdict counters for the flight log: how often each transition
+        # fired over the whole run (safe-mode churn at a glance)
+        self._transitions = {"ok": 0, "silent": 0, "safe": 0, "recovered": 0}
 
     @property
     def safe_mode(self) -> bool:
@@ -205,21 +208,32 @@ class TelemetryWatchdog:
             self._silent = 0
             if self._safe:
                 self._safe = False
-                return "recovered"
-            return "ok"
-        self._silent += 1
-        if self._silent >= self.blackout_epochs:
-            self._safe = True
-            return "safe"
-        return "silent"
+                verdict = "recovered"
+            else:
+                verdict = "ok"
+        else:
+            self._silent += 1
+            if self._silent >= self.blackout_epochs:
+                self._safe = True
+                verdict = "safe"
+            else:
+                verdict = "silent"
+        self._transitions[verdict] += 1
+        return verdict
 
     def state(self) -> dict:
         """JSON-able snapshot for campaign journaling (``dist.cosim``)."""
-        return dict(silent=self._silent, safe=self._safe)
+        return dict(silent=self._silent, safe=self._safe,
+                    transitions=dict(self._transitions))
 
     def restore(self, state: dict) -> None:
         self._silent = int(state.get("silent", 0))
         self._safe = bool(state.get("safe", False))
+        t = state.get("transitions")
+        if t:
+            self._transitions = {k: int(t.get(k, 0))
+                                 for k in ("ok", "silent", "safe",
+                                           "recovered")}
 
 
 # ------------------------------------------------------------- pod remesh

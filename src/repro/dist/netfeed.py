@@ -52,6 +52,29 @@ def path_utilization(topo, outs, *, leaf: int | None = None,
     return util[leaf] if leaf is not None else util.max(axis=0)
 
 
+def hot_uplinks(topo, outs, *, capacity: np.ndarray | None = None,
+                top_n: int = 5) -> list[dict]:
+    """The ``top_n`` busiest (leaf, spine) uplinks by time-mean utilization,
+    as JSON-able dicts for the flight log: ``{"leaf", "uplink", "link",
+    "util", "offered_gbps"}``, hottest first.  Dead uplinks (capacity ~0)
+    report ``util`` as a large sentinel (1e6) rather than inf so the
+    records stay strict-JSON parseable."""
+    up = np.asarray(outs.uplink_load)  # [T', L, S]
+    ids = np.asarray(topo.uplink_ids)  # [L, S]
+    cap_vec = np.asarray(topo.capacity if capacity is None else capacity)
+    cap = cap_vec[ids]
+    offered = up.mean(axis=0)  # [L, S]
+    util = np.where(cap <= 0.0, 1e6, offered / np.maximum(cap, 1.0))
+    flat = np.argsort(util.ravel())[::-1][:top_n]
+    out = []
+    for k in flat:
+        leaf, s = divmod(int(k), util.shape[1])
+        out.append(dict(leaf=leaf, uplink=s, link=int(ids[leaf, s]),
+                        util=round(float(util[leaf, s]), 6),
+                        offered_gbps=round(float(offered[leaf, s]) / 1e9, 6)))
+    return out
+
+
 def _paths_for_uplink(topo, uplink: int) -> tuple[int, ...]:
     if topo.kind == "three_tier":
         n_core = topo.n_paths // topo.uplink_ids.shape[1]

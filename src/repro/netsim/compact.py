@@ -97,6 +97,7 @@ class CompactResult(NamedTuple):
     spill_steps: int
     window_slots: int = 0  # W the (final) run used
     ff_steps: int = 0  # dt steps covered by closed-form fast-forward
+    ring: object = None  # obs.recorder.RingState when recording was on
 
 
 def max_concurrency_bound(
@@ -694,7 +695,8 @@ def run_core(topo: Topology, cfg: SimConfig, W: int, F_pad: int, A: int,
              capacity: jax.Array | None = None,
              loss: jax.Array | None = None,
              cap_seg_steps: int = 0,
-             gate_admission: bool = False):
+             gate_admission: bool = False,
+             record=None):
     """Jit-friendly core: sorted/padded trace arrays + a donatable +inf
     finish buffer in, (finish[F_pad] in sorted order, cnp_pkts, spill_steps,
     ff_steps, per-step outputs) out.  Wrapped and cached by netsim/sweep.py;
@@ -727,7 +729,16 @@ def run_core(topo: Topology, cfg: SimConfig, W: int, F_pad: int, A: int,
     un-vmapped dispatch paths (B=1 / one-sim-per-device), which is where
     the sweep runner lands on CPU; under vmap it lowers to
     both-branches-plus-select and saves nothing.  ``adaptive=False``
-    traces the identical step loop as before (bit-identical results)."""
+    traces the identical step loop as before (bit-identical results).
+
+    ``record`` (an ``obs.recorder.RecordSpec``, static/hashable) appends a
+    per-chunk summary row to a fixed-shape ring buffer carried alongside
+    the loop state and returns it as a sixth output.  All gating is at
+    Python trace time: ``record=None`` traces the identical program as
+    before the recorder existed (bit-identical, sha-pinned), and because
+    the ring's shapes depend only on the spec, recording costs exactly one
+    extra executable per (shape bucket, spec) — never a rebuild across
+    epochs (DESIGN.md §16)."""
     _, step_fn, phases = build_compact_sim(topo, cfg, trace_arrays, W, F_pad,
                                            A, gate_admission=gate_admission,
                                            capacity=capacity, loss=loss,
@@ -753,11 +764,10 @@ def run_core(topo: Topology, cfg: SimConfig, W: int, F_pad: int, A: int,
             | (jnp.max(st.queue[:nl]) > 0.0)
         )
 
-    def run_block(st, outs, length):
-        """Scan ``length`` (static) steps and splice the outputs in at the
-        (chunk-aligned, so sample-window-aligned) offset ``st.step``."""
-        k0 = st.step
-        st2, o = jax.lax.scan(step_fn, st, None, length=length)
+    def splice(outs, o, k0, length):
+        """Write a block's per-step output slab into the preallocated
+        horizon outputs at the (chunk-aligned, so sample-window-aligned)
+        offset ``k0``."""
         gp = jax.lax.dynamic_update_slice(outs.goodput_total, o.goodput_total, (k0,))
         cn = jax.lax.dynamic_update_slice(outs.cnp_rate, o.cnp_rate, (k0,))
         mq = jax.lax.dynamic_update_slice(outs.max_queue, o.max_queue, (k0,))
@@ -769,37 +779,114 @@ def run_core(topo: Topology, cfg: SimConfig, W: int, F_pad: int, A: int,
                 slab = slab.reshape((nw, s) + slab.shape[1:]).mean(axis=1)
             up = jax.lax.dynamic_update_slice(
                 up, slab, (k0 // s,) + (0,) * len(uplink_shape))
-        return st2, StepOutputs(up, gp, cn, mq)
+        return StepOutputs(up, gp, cn, mq)
+
+    def run_block(st, outs, length):
+        """Scan ``length`` (static) steps; returns the block's raw output
+        slab too (only the recorder consumes it — discarded otherwise, at
+        Python level, so the traced program is unchanged)."""
+        k0 = st.step
+        st2, o = jax.lax.scan(step_fn, st, None, length=length)
+        return st2, splice(outs, o, k0, length), o
+
+    if record is not None:
+        from repro.obs import recorder
+
+        uplink_flat = jnp.asarray(np.asarray(topo.uplink_ids).ravel())
+        ring0 = recorder.ring_init(record, int(uplink_flat.size))
+        if capacity is None:
+            cap_row = jnp.asarray(topo.capacity)[uplink_flat]
+
+            def cap_row_of(step):
+                return cap_row
+        else:
+            cap_arr_r = jnp.asarray(capacity)
+            if cap_arr_r.ndim == 2:
+                seg_r = max(int(cap_seg_steps), 1)
+                kseg_r = cap_arr_r.shape[0]
+
+                def cap_row_of(step):
+                    row = cap_arr_r[jnp.minimum(step // seg_r, kseg_r - 1)]
+                    return row[uplink_flat]
+            else:
+                cap_row_r = cap_arr_r[uplink_flat]
+
+                def cap_row_of(step):
+                    return cap_row_r
+
+        def rec_chunk(ring, st0, st2, o, length, ff):
+            """One ring row from a block's raw slab + boundary state.
+            ``o.uplink_load`` is per-step for scanned blocks and per-window
+            for fast-forwarded ones — the mean over axis 0 is the chunk
+            mean either way (a window average of constants)."""
+            occupied = st2.slot_fid < F_pad
+            active = occupied[:, None] & ~st2.sub_done
+            return recorder.record_chunk(
+                record, ring, step0=st0.step, steps=length, ff=ff,
+                queue_max=jnp.max(o.max_queue),
+                queue_mean=jnp.mean(o.max_queue),
+                cnp=jnp.sum(o.cnp_rate), goodput=jnp.mean(o.goodput_total),
+                offered=o.uplink_load.mean(axis=0).reshape(-1),
+                cap=cap_row_of(st0.step), rc=st2.cc.rc, active=active)
 
     if cfg.adaptive:
         macro = K * cfg.ff_macro_chunks
         horizon = n_chunks * K
         quiesce, fast_forward = phases["quiesce"], phases["fast_forward"]
 
-        def body(c):
-            st, outs = c
-            quiet = quiesce(st, macro) & ((st.step + macro) <= horizon)
+        def ff_block(st0, o0):
+            st2, o = fast_forward(st0, macro)
+            gp = jax.lax.dynamic_update_slice(
+                o0.goodput_total, o.goodput_total, (st0.step,))
+            cn = jax.lax.dynamic_update_slice(o0.cnp_rate, o.cnp_rate,
+                                              (st0.step,))
+            mq = jax.lax.dynamic_update_slice(o0.max_queue, o.max_queue,
+                                              (st0.step,))
+            up = jax.lax.dynamic_update_slice(
+                o0.uplink_load, o.uplink_load,
+                (st0.step // s,) + (0,) * len(uplink_shape))
+            return st2, StepOutputs(up, gp, cn, mq), o
 
-            def do_ff(c2):
-                st0, o0 = c2
-                k0 = st0.step
-                st2, o = fast_forward(st0, macro)
-                gp = jax.lax.dynamic_update_slice(
-                    o0.goodput_total, o.goodput_total, (k0,))
-                cn = jax.lax.dynamic_update_slice(o0.cnp_rate, o.cnp_rate, (k0,))
-                mq = jax.lax.dynamic_update_slice(o0.max_queue, o.max_queue, (k0,))
-                up = jax.lax.dynamic_update_slice(
-                    o0.uplink_load, o.uplink_load,
-                    (k0 // s,) + (0,) * len(uplink_shape))
-                return st2, StepOutputs(up, gp, cn, mq)
+        if record is None:
+            def body(c):
+                st, outs = c
+                quiet = quiesce(st, macro) & ((st.step + macro) <= horizon)
 
-            return jax.lax.cond(
-                quiet, do_ff, lambda c2: run_block(c2[0], c2[1], K), c)
+                def do_ff(c2):
+                    st2, outs2, _ = ff_block(c2[0], c2[1])
+                    return st2, outs2
+
+                def do_run(c2):
+                    st2, outs2, _ = run_block(c2[0], c2[1], K)
+                    return st2, outs2
+
+                return jax.lax.cond(quiet, do_ff, do_run, c)
+        else:
+            def body(c):
+                st, outs, ring = c
+                quiet = quiesce(st, macro) & ((st.step + macro) <= horizon)
+
+                def do_ff(c2):
+                    st2, outs2, o = ff_block(c2[0], c2[1])
+                    return st2, outs2, rec_chunk(c2[2], c2[0], st2, o,
+                                                 macro, 1)
+
+                def do_run(c2):
+                    st2, outs2, o = run_block(c2[0], c2[1], K)
+                    return st2, outs2, rec_chunk(c2[2], c2[0], st2, o, K, 0)
+
+                return jax.lax.cond(quiet, do_ff, do_run, c)
     else:
-        def body(c):
-            return run_block(c[0], c[1], K)
+        if record is None:
+            def body(c):
+                st2, outs2, _ = run_block(c[0], c[1], K)
+                return st2, outs2
+        else:
+            def body(c):
+                st2, outs2, o = run_block(c[0], c[1], K)
+                return st2, outs2, rec_chunk(c[2], c[0], st2, o, K, 0)
 
-    carry = (init, outs0)
+    carry = (init, outs0) if record is None else (init, outs0, ring0)
     if n_chunks:
         carry = jax.lax.while_loop(
             lambda c: (c[0].step < n_chunks * K) & alive(c[0]),
@@ -807,14 +894,19 @@ def run_core(topo: Topology, cfg: SimConfig, W: int, F_pad: int, A: int,
             carry,
         )
     if tail:  # horizon not divisible by K: one short block, same early exit
-        carry = jax.lax.cond(
-            alive(carry[0]),
-            lambda c: run_block(c[0], c[1], tail),
-            lambda c: c,
-            carry,
-        )
-    final, outs = carry
-    return final.finish, final.cnp_pkts, final.spill_steps, final.ff_steps, outs
+        if record is None:
+            def tail_block(c):
+                st2, outs2, _ = run_block(c[0], c[1], tail)
+                return st2, outs2
+        else:
+            def tail_block(c):
+                st2, outs2, o = run_block(c[0], c[1], tail)
+                return st2, outs2, rec_chunk(c[2], c[0], st2, o, tail, 0)
+        carry = jax.lax.cond(alive(carry[0]), tail_block, lambda c: c, carry)
+    final, outs = carry[0], carry[1]
+    base = (final.finish, final.cnp_pkts, final.spill_steps, final.ff_steps,
+            outs)
+    return base if record is None else base + (carry[2],)
 
 
 def sort_trace(trace: Trace) -> tuple[tuple, np.ndarray, int]:

@@ -311,6 +311,24 @@ class FaultCampaign:
     def summary(self) -> list[str]:
         return [f"{type(ev).__name__} {ev}" for ev in self.events]
 
+    def activations(self, epoch: int) -> list[dict]:
+        """JSON-able descriptions of every event active THIS epoch — the
+        flight log's ``faults`` field, so the perfetto exporter can lay
+        each fault's span under the epochs it perturbs."""
+        out = []
+        for ev in self.events:
+            if not ev.active(epoch):
+                continue
+            d = dict(kind=type(ev).__name__, start_epoch=ev.start_epoch,
+                     end_epoch=ev.end_epoch)
+            for f in ("links", "rank", "scale", "loss_rate", "slowdown",
+                      "duty", "period_frac", "onset_frac", "width_frac"):
+                if hasattr(ev, f):
+                    v = getattr(ev, f)
+                    d[f] = list(v) if isinstance(v, tuple) else v
+            out.append(d)
+        return out
+
 
 def random_campaign(topo, *, seed: int, epochs: int, n_faults: int = 3,
                     kinds: tuple[str, ...] = ("flap", "brownout", "lossy",

@@ -35,13 +35,50 @@ from repro.netsim.topology import Topology
 from repro.netsim.workloads import Trace
 
 
-def _time_us(fn, *args, iters: int) -> float:
-    out = jax.block_until_ready(fn(*args))  # compile + warm
-    t0 = time.perf_counter()
+class TimeUs(float):
+    """A per-call time in µs that is still a float (the value is the MIN
+    over iterations — the least-noise estimator every phase table keys on)
+    but carries the full per-iteration sample distribution for the flight
+    log / bench JSON: ``.min_us`` / ``.mean_us`` / ``.std_us`` /
+    ``.samples``, or all four via ``.stats()``."""
+
+    __slots__ = ("samples",)
+
+    def __new__(cls, samples):
+        samples = [float(s) for s in samples]
+        self = super().__new__(cls, min(samples))
+        self.samples = samples
+        return self
+
+    @property
+    def min_us(self) -> float:
+        return float(self)
+
+    @property
+    def mean_us(self) -> float:
+        return sum(self.samples) / len(self.samples)
+
+    @property
+    def std_us(self) -> float:
+        m = self.mean_us
+        return (sum((s - m) ** 2 for s in self.samples)
+                / len(self.samples)) ** 0.5
+
+    def stats(self) -> dict:
+        """JSON-able {min_us, mean_us, std_us, iters}."""
+        return dict(min_us=round(self.min_us, 3),
+                    mean_us=round(self.mean_us, 3),
+                    std_us=round(self.std_us, 3), iters=len(self.samples))
+
+
+def _time_us(fn, *args, iters: int) -> TimeUs:
+    jax.block_until_ready(fn(*args))  # compile + warm
+    samples = []
     for _ in range(iters):
-        out = jax.block_until_ready(fn(*args))
-    del out
-    return (time.perf_counter() - t0) / iters * 1e6
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        samples.append((time.perf_counter() - t0) * 1e6)
+    return TimeUs(samples)
 
 
 def profile_phases(

@@ -54,8 +54,11 @@ W_BUCKET = 256
 
 _JIT_CACHE: dict = {}
 _CACHE_STATS = {"builds": 0, "hits": 0}
+_OBS_STATS = {"spill_retries": 0, "job_retries": 0, "job_timeouts": 0,
+              "job_failures": 0}
 _COMPILE_CACHE_SET = False
 _COMPILE_CACHE_LOCK = threading.Lock()
+_JAX_TRACE_DIR: str | None = None
 
 
 def cache_stats() -> dict:
@@ -66,6 +69,18 @@ def cache_stats() -> dict:
     ``capacity`` passed as a traced operand, every epoch after the first
     must add zero builds."""
     return dict(_CACHE_STATS)
+
+
+def obs_stats() -> dict:
+    """Flight-log counters (DESIGN.md §16): the compile stats plus the
+    sweep runner's resilience events — spill retries (``_run_group``
+    window doubling), job retries / timeouts / salvaged failures
+    (``run_jobs``).  The co-sim driver snapshots this per epoch into the
+    flight log so a slow epoch is attributable (recompile? spill retry?
+    crashed cell?) without rerunning anything."""
+    out = dict(_CACHE_STATS)
+    out.update(_OBS_STATS)
+    return out
 
 
 def enable_compile_cache() -> str | None:
@@ -124,6 +139,32 @@ def clear_cache() -> None:
     _JIT_CACHE.clear()
     _CACHE_STATS["builds"] = 0
     _CACHE_STATS["hits"] = 0
+    for k in _OBS_STATS:
+        _OBS_STATS[k] = 0
+
+
+def _maybe_start_jax_trace() -> None:
+    """Latch ``jax.profiler.start_trace`` on REPRO_JAX_TRACE_DIR: set the
+    env var to a directory to capture a device-level profiler trace of the
+    sweep dispatches (viewable in perfetto/tensorboard), stopped at process
+    exit.  Off (and free) when unset."""
+    global _JAX_TRACE_DIR
+    path = os.environ.get("REPRO_JAX_TRACE_DIR")
+    if not path or _JAX_TRACE_DIR is not None:
+        return
+    try:
+        jax.profiler.start_trace(path)
+    except Exception as e:  # pragma: no cover - backend-dependent
+        import warnings
+
+        warnings.warn(f"REPRO_JAX_TRACE_DIR set but start_trace failed "
+                      f"({e!r})", RuntimeWarning, stacklevel=2)
+        _JAX_TRACE_DIR = ""
+        return
+    _JAX_TRACE_DIR = path
+    import atexit
+
+    atexit.register(jax.profiler.stop_trace)
 
 
 def _topo_key(topo: Topology, traced_cap: bool = False) -> tuple:
@@ -157,7 +198,7 @@ def _f_bucket(F: int) -> int:
 
 
 def _gated_b1(topo: Topology, cfg: SimConfig, W: int, F_pad: int, A: int,
-              n_steps: int, cap_seg_steps: int = 0):
+              n_steps: int, cap_seg_steps: int = 0, record=None):
     """Single-sim callable over [1, ...]-leading inputs: no vmap wrapper,
     and the admission block gated behind a REAL lax.cond branch (vmap
     would lower it to both-branches + select) — once arrivals drain (3/4
@@ -169,7 +210,7 @@ def _gated_b1(topo: Topology, cfg: SimConfig, W: int, F_pad: int, A: int,
     serves every arity — the executable cache key distinguishes them)."""
     core = functools.partial(compact.run_core, topo, cfg, W, F_pad, A,
                              n_steps, cap_seg_steps=cap_seg_steps,
-                             gate_admission=True)
+                             gate_admission=True, record=record)
 
     def fn_one(trace_arrays, finish0, *ops):
         squeeze = lambda a: jnp.squeeze(a, 0)
@@ -182,22 +223,27 @@ def _gated_b1(topo: Topology, cfg: SimConfig, W: int, F_pad: int, A: int,
 
 def _compiled(topo: Topology, cfg: SimConfig, W: int, F_pad: int, A: int,
               n_steps: int, batch: int, n_ops: int = 0,
-              cap_seg_steps: int = 0, cap_rows: int = 1):
+              cap_seg_steps: int = 0, cap_rows: int = 1, record=None):
     """``n_ops`` counts the traced operands after (trace_arrays, finish0):
     0 = none, 1 = capacity, 2 = capacity + loss.  ``cap_seg_steps`` and
     ``cap_rows`` (K of a 2-D schedule) are static shape/stride facts that
-    must key the executable alongside the shapes."""
+    must key the executable alongside the shapes.  ``record`` (hashable
+    ``obs.RecordSpec`` or None) keys the executable too: the ring buffer's
+    shapes are a pure function of the spec, so recording costs exactly one
+    extra program per (shape bucket, spec) and never a rebuild across
+    epochs — the contract ``check_bench.py --obs`` gates."""
     key = (_topo_key(topo, n_ops > 0), cfg, W, F_pad, A, n_steps, batch,
-           n_ops, cap_seg_steps, cap_rows)
+           n_ops, cap_seg_steps, cap_rows, record)
     fn = _JIT_CACHE.get(key)
     if fn is None:
         if batch == 1:
             fn = jax.jit(_gated_b1(topo, cfg, W, F_pad, A, n_steps,
-                                   cap_seg_steps),
+                                   cap_seg_steps, record),
                          donate_argnums=(1,))
         else:
             core = functools.partial(compact.run_core, topo, cfg, W, F_pad,
-                                     A, n_steps, cap_seg_steps=cap_seg_steps)
+                                     A, n_steps, cap_seg_steps=cap_seg_steps,
+                                     record=record)
             in_axes = (0, 0) + (None,) * n_ops
             fn = jax.jit(jax.vmap(core, in_axes=in_axes), donate_argnums=(1,))
         _JIT_CACHE[key] = fn
@@ -218,7 +264,7 @@ def sweep_devices() -> int:
 def _compiled_sharded(topo: Topology, cfg: SimConfig, W: int, F_pad: int,
                       A: int, n_steps: int, per_dev: int, n_dev: int,
                       n_ops: int = 0, cap_seg_steps: int = 0,
-                      cap_rows: int = 1):
+                      cap_rows: int = 1, record=None):
     """pmap-of-vmap executable: inputs carry a leading [n_dev, per_dev]
     batch, one shard per local device.  Each shard runs the identical
     vmapped compact scan, so per-sim results match the single-device path
@@ -226,17 +272,18 @@ def _compiled_sharded(topo: Topology, cfg: SimConfig, W: int, F_pad: int,
     operands (capacity [+ loss]) are broadcast to every device
     (in_axes None)."""
     key = (_topo_key(topo, n_ops > 0), cfg, W, F_pad, A, n_steps, per_dev,
-           n_dev, n_ops, cap_seg_steps, cap_rows, "pmap")
+           n_dev, n_ops, cap_seg_steps, cap_rows, record, "pmap")
     fn = _JIT_CACHE.get(key)
     if fn is None:
         if per_dev == 1:
             # one sim per device: same gated, vmap-free core as the plain
             # batch==1 path
-            inner = _gated_b1(topo, cfg, W, F_pad, A, n_steps, cap_seg_steps)
+            inner = _gated_b1(topo, cfg, W, F_pad, A, n_steps, cap_seg_steps,
+                              record)
         else:
             core = functools.partial(
                 compact.run_core, topo, cfg, W, F_pad, A, n_steps,
-                cap_seg_steps=cap_seg_steps)
+                cap_seg_steps=cap_seg_steps, record=record)
             inner = jax.vmap(core, in_axes=(0, 0) + (None,) * n_ops)
         in_axes = (0, 0) + (None,) * n_ops
         fn = jax.pmap(inner, devices=jax.local_devices()[:n_dev],
@@ -312,8 +359,21 @@ def batch_mode() -> str:
     return "persim" if jax.default_backend() == "cpu" else "vmap"
 
 
+def _trace_span(name: str = "repro.sweep.dispatch"):
+    """``jax.profiler`` annotation around a leaf dispatch: when a device
+    trace is being captured (REPRO_JAX_TRACE_DIR -> ``start_trace``), the
+    sweep executions show up as named spans in perfetto/tensorboard.
+    Near-free when no trace is active."""
+    try:
+        return jax.profiler.TraceAnnotation(name)
+    except Exception:  # pragma: no cover - older jax spellings
+        import contextlib
+
+        return contextlib.nullcontext()
+
+
 def _dispatch(topo, cfg, W, F_pad, A, n_steps, stacked, B, capacity=None,
-              loss=None, cap_seg_steps=0):
+              loss=None, cap_seg_steps=0, record=None):
     """Run a stacked [B, ...] batch, returning (finish, cnp, spill,
     ff_steps, outs) with a leading [B] axis.  >1 local device: pad B up to a multiple of
     the device count (duplicating the last row — padding results are
@@ -325,7 +385,9 @@ def _dispatch(topo, cfg, W, F_pad, A, n_steps, stacked, B, capacity=None,
     operand when given — fault-schedule sweeps then reuse one executable
     across capacity changes.  ``loss`` (f32[n_links + 1], requires
     ``capacity``) adds the per-link loss-rate operand for go-back-N
-    goodput amplification (faults.LossyLink)."""
+    goodput amplification (faults.LossyLink).  ``record`` (static
+    ``obs.RecordSpec``) appends the in-sim ring buffer as a sixth output
+    leaf with the same leading [B] axis."""
     assert loss is None or capacity is not None, \
         "loss operand requires an explicit capacity operand"
     ops = () if capacity is None else (jnp.asarray(capacity, jnp.float32),)
@@ -347,9 +409,10 @@ def _dispatch(topo, cfg, W, F_pad, A, n_steps, stacked, B, capacity=None,
             jnp.asarray(a.reshape((D, per) + a.shape[1:])) for a in stacked
         )
         fn = _compiled_sharded(topo, cfg, W, F_pad, A, n_steps, per, D,
-                               n_ops, cap_seg_steps, cap_rows)
+                               n_ops, cap_seg_steps, cap_rows, record)
         finish0 = jnp.full((D, per, F_pad), jnp.inf, jnp.float32)
-        out = fn(shaped, finish0, *ops)
+        with _trace_span():
+            out = fn(shaped, finish0, *ops)
         return jax.tree.map(
             lambda a: jnp.reshape(a, (Bp,) + a.shape[2:])[:B], out
         )
@@ -359,18 +422,19 @@ def _dispatch(topo, cfg, W, F_pad, A, n_steps, stacked, B, capacity=None,
         parts = [
             _dispatch(topo, cfg, W, F_pad, A, n_steps,
                       tuple(a[i:i + 1] for a in stacked), 1, capacity,
-                      loss, cap_seg_steps)
+                      loss, cap_seg_steps, record)
             for i in range(B)
         ]
         return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *parts)
     fn = _compiled(topo, cfg, W, F_pad, A, n_steps, B, n_ops, cap_seg_steps,
-                   cap_rows)
+                   cap_rows, record)
     finish0 = jnp.full((B, F_pad), jnp.inf, jnp.float32)
-    return fn(tuple(jnp.asarray(a) for a in stacked), finish0, *ops)
+    with _trace_span():
+        return fn(tuple(jnp.asarray(a) for a in stacked), finish0, *ops)
 
 
 def _run_group(topo, cfg, prepped, n_steps, window_slots, capacity=None,
-               loss=None, cap_seg_steps=0):
+               loss=None, cap_seg_steps=0, record=None):
     """One vmapped run over traces sharing an F_pad bucket, with the
     spill-retry loop: the concurrency bound is a heuristic, so any sim that
     reports spill_steps > 0 (an arrived flow found no free slot — its
@@ -397,9 +461,11 @@ def _run_group(topo, cfg, prepped, n_steps, window_slots, capacity=None,
             np.stack([padded[i][k] for i in pending]) for k in range(6)
         )
         t0 = time.time()
-        finish, cnp, spill, ff, outs = _dispatch(
+        out = _dispatch(
             topo, cfg, W, F_pad, A, n_steps, stacked, len(pending), capacity,
-            loss, cap_seg_steps)
+            loss, cap_seg_steps, record)
+        finish, cnp, spill, ff, outs = out[:5]
+        ring = out[5] if len(out) > 5 else None
         spill = np.asarray(spill)
         finish = np.asarray(finish)
         cnp = np.asarray(cnp)
@@ -416,6 +482,8 @@ def _run_group(topo, cfg, prepped, n_steps, window_slots, capacity=None,
                     finish=finish[b, :F][inv], cnp_pkts=cnp[b],
                     spill_steps=int(spill[b]), window_slots=W,
                     ff_steps=int(ff[b]),
+                    ring=None if ring is None
+                    else jax.tree.map(lambda a, b=b: a[b], ring),
                 )
                 outs_list[i] = jax.tree.map(lambda a, b=b: a[b], outs)
             else:
@@ -423,6 +491,7 @@ def _run_group(topo, cfg, prepped, n_steps, window_slots, capacity=None,
                 still_rows.append(b)
         pending = still
         if pending:
+            _OBS_STATS["spill_retries"] += 1
             seen = _observed_concurrency(
                 [prepped[i] for i in pending], finish[still_rows], n_steps * cfg.dt
             )
@@ -440,6 +509,7 @@ def run_batch(
     capacity: np.ndarray | None = None,
     loss: np.ndarray | None = None,
     cap_seg_steps: int = 0,
+    record=None,
 ) -> tuple[list[compact.CompactResult], list[StepOutputs]]:
     """Run every trace under one (scheme, topology) static pair as vmapped,
     donated, cached-compile computations — one per F_pad shape bucket, so a
@@ -454,9 +524,15 @@ def run_batch(
     static ``cap_seg_steps`` stride extends that to wall-clock fault onsets
     (faults.FaultCampaign).  ``loss`` (f32[n_links + 1]) adds the per-link
     loss-rate operand (lossy-link go-back-N amplification); capacity is
-    promoted to ``topo.capacity`` automatically if only loss is given."""
+    promoted to ``topo.capacity`` automatically if only loss is given.
+
+    ``record`` (an ``obs.RecordSpec``) turns on the in-sim flight recorder:
+    each result's ``ring`` field carries the per-chunk summary ring
+    (drain with ``obs.drain``).  ``record=None`` is bit-identical to the
+    recorder not existing."""
     assert traces, "empty sweep"
     enable_compile_cache()
+    _maybe_start_jax_trace()
     if loss is not None and capacity is None:
         capacity = np.asarray(topo.capacity)
     prepped = [compact.sort_trace(t) for t in traces]
@@ -468,7 +544,8 @@ def run_batch(
     outs_list: list = [None] * len(traces)
     for idxs in groups.values():
         res, outs = _run_group(topo, cfg, [prepped[i] for i in idxs], n_steps,
-                               window_slots, capacity, loss, cap_seg_steps)
+                               window_slots, capacity, loss, cap_seg_steps,
+                               record)
         for i, r, o in zip(idxs, res, outs):
             results[i] = r
             outs_list[i] = o
@@ -479,10 +556,11 @@ def run_one(topo: Topology, cfg: SimConfig, trace: Trace, *,
             window_slots: int | None = None,
             capacity: np.ndarray | None = None,
             loss: np.ndarray | None = None,
-            cap_seg_steps: int = 0):
+            cap_seg_steps: int = 0,
+            record=None):
     results, outs = run_batch(topo, cfg, [trace], window_slots=window_slots,
                               capacity=capacity, loss=loss,
-                              cap_seg_steps=cap_seg_steps)
+                              cap_seg_steps=cap_seg_steps, record=record)
     return results[0], outs[0]
 
 
@@ -557,11 +635,13 @@ def _run_job_resilient(job, index: int, *, retries: int, backoff_s: float,
             return _run_job(job)
         except Exception as e:  # noqa: BLE001 — grid cells fail arbitrarily
             if attempt <= retries:
+                _OBS_STATS["job_retries"] += 1
                 time.sleep(retry_sleep_s(index, attempt, backoff_s,
                                          jitter_frac))
                 continue
             if not salvage:
                 raise
+            _OBS_STATS["job_failures"] += 1
             return JobFailure(index=index, attempts=attempt,
                               error=f"{type(e).__name__}: {e}",
                               elapsed_s=time.time() - t0)
@@ -633,6 +713,7 @@ def run_jobs(
                 out.append(f.result(timeout=timeout_s))
             except cf.TimeoutError:
                 timed_out = True
+                _OBS_STATS["job_timeouts"] += 1
                 if not salvage:
                     raise
                 out.append(JobFailure(index=i, attempts=1,
