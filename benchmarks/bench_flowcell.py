@@ -1,0 +1,151 @@
+"""Flowcell-granularity acceptance bench (DESIGN.md §17).
+
+The reordering trade the paper's no-reordering rule avoids, measured
+head-on and CI-gated by ``scripts/check_bench.py --flowcell``:
+
+  * SeqBalance (chunk granularity, no reordering) vs flowcell spraying
+    (chunks split over all active paths) vs flowlet WCMP rerouting, as
+    censored-p99 grids on the symmetric fabric AND the mixed 100G/400G
+    hetero fabric — the flowcell arm runs once with the reordering cost
+    forced FREE (reorder=None) and once per go-back-N budget.  The
+    acceptance shape: spraying beats SeqBalance ONLY in the free arm and
+    loses at a strict realistic budget on the symmetric fabric (the
+    paper's motivation, quantified);
+  * compile-reuse: a solo co-sim with flowcells + reorder live builds all
+    executables at epoch 0 and ZERO after (spray is a traced trace
+    column, the budget a traced scalar operand);
+  * degeneracy: flowcells=1 / reorder=0-on-unsprayed arms must match the
+    classic path with stat diff EXACTLY 0 (not epsilon).
+
+Run FIRST in its shape bucket for clean rebuild attribution — the bench
+clears the sweep cache itself.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from benchmarks.common import PERF, emit
+
+
+def _censored_p99(result, trace, horizon_s):
+    from repro.netsim import metrics
+
+    f, completion = metrics.fct_samples(result, trace, horizon_s=horizon_s)
+    return (float(np.percentile(f, 99) * 1e6),
+            float(np.percentile(f, 50) * 1e6), completion)
+
+
+def _grid(topo, link_bw, *, duration_s, size, gap, budgets, fcells):
+    """One fabric's arm grid: scheme baselines at chunk granularity, then
+    the flowcell split at every reorder budget (None = cost-free)."""
+    from repro.dist import collectives, cosim
+    from repro.netsim import sweep, workloads
+    from repro.netsim.engine import SimConfig
+
+    hosts = cosim.ring_hosts(topo, 8)
+    P = topo.n_paths
+    plan = collectives.PathPlan(n_chunks=4, directions=(1, -1, 1, -1))
+    plan_fc = dataclasses.replace(plan, flowcells=fcells)
+    kw = dict(link_bw=link_bw, round_gap_s=gap, seed=0, steer_paths=P)
+    tr = workloads.collective_trace(plan, hosts, size, **kw)
+    tr_fc = workloads.collective_trace(plan_fc, hosts, size, **kw)
+
+    arms = [("seqbalance", "seqbalance", tr, None),
+            ("ecmp", "ecmp", tr, None),
+            ("flowlet_timeout", "flowlet_timeout", tr, None),
+            ("flowcell_free", "ecmp", tr_fc, None)]
+    for b in budgets:
+        arms.append((f"flowcell_b{int(b)}", "ecmp", tr_fc, float(b)))
+
+    rows = {}
+    for name, scheme, trace, reorder in arms:
+        cfg = SimConfig(scheme=scheme, duration_s=duration_s)
+        res, _ = sweep.run_one(topo, cfg, trace, reorder=reorder)
+        p99, p50, completion = _censored_p99(res, trace, duration_s)
+        rows[name] = dict(p99_us=round(p99, 2), p50_us=round(p50, 2),
+                          completion=round(completion, 4),
+                          scheme=scheme, reorder_budget=reorder,
+                          flowcells=fcells if trace is tr_fc else 1)
+    return rows
+
+
+def bench_flowcell(fast=True):
+    from repro.dist import cosim
+    from repro.netsim import sweep, topology, workloads
+    from repro.netsim.engine import SimConfig
+
+    duration_s = 10e-3
+    size, gap = 16e6, 3e-4
+    budgets = (0, 4, 16) if fast else (0, 2, 4, 8, 16, 64)
+    fcells = 4
+
+    # fabric-bound scenario: 100G hosts over a 25G fabric, so the uplinks
+    # (not the NICs) decide the FCT tail the balancer is judged on
+    topo_sym = topology.leaf_spine(4, 4, 4, 25e9, host_bw=100e9)
+    topo_het = topology.hetero_leaf_spine(4, 4, 4, 25e9, 100e9,
+                                          n_fast_spines=1, host_bw=100e9)
+    sweep.clear_cache()
+    t0 = time.time()
+    grids = {}
+    for fabric, topo in (("symmetric", topo_sym), ("hetero", topo_het)):
+        grids[fabric] = _grid(topo, 25e9, duration_s=duration_s, size=size,
+                              gap=gap, budgets=budgets, fcells=fcells)
+    wall_grid = time.time() - t0
+
+    sym = grids["symmetric"]
+    free_wins = sym["flowcell_free"]["p99_us"] <= sym["seqbalance"]["p99_us"]
+    strict = sym[f"flowcell_b{int(budgets[0])}"]
+    gbn_loses = strict["p99_us"] >= sym["seqbalance"]["p99_us"]
+    emit("flowcell_grid", wall_grid / max(len(sym), 1) * 1e6,
+         f"sym_p99us_seq_{sym['seqbalance']['p99_us']:.0f}_free_"
+         f"{sym['flowcell_free']['p99_us']:.0f}_strict_"
+         f"{strict['p99_us']:.0f}_free_wins_{free_wins}"
+         f"_gbn_loses_{gbn_loses}")
+
+    # ---------------- compile reuse: solo co-sim, flowcells + budget live
+    topo_c = topology.leaf_spine(4, 4, 4, 100e9)
+    sweep.clear_cache()
+    hist = cosim.run_cosim(
+        topo_c, cosim.ring_hosts(topo_c, 8), 4e6, scheme="seqbalance",
+        epochs=4 if fast else 8, phi_steps=2, n_chunks=4, seed=0,
+        flowcells=fcells, reorder_budget=16.0,
+        faults=(cosim.kill_spine(topo_c, 2, epoch=1, recover_epoch=3),))
+    rebuilds = sum(r.new_builds for r in hist.records[1:])
+    emit("flowcell_cosim_reuse", 0.0,
+         f"rebuilds_after_e0_{rebuilds}_epochs_{len(hist.records)}")
+
+    # ---------------- degeneracy: flowcells=1 and reorder-on-unsprayed
+    # must match the classic path with stat diff EXACTLY 0
+    from repro.dist import collectives
+
+    plan1 = collectives.PathPlan(n_chunks=4, directions=(1, -1, 1, -1),
+                                 flowcells=1, reorder_budget=9.0)
+    plan0 = collectives.PathPlan(n_chunks=4, directions=(1, -1, 1, -1))
+    kw = dict(link_bw=25e9, round_gap_s=gap, seed=0,
+              steer_paths=topo_sym.n_paths)
+    hosts = cosim.ring_hosts(topo_sym, 8)
+    tr0 = workloads.collective_trace(plan0, hosts, size, **kw)
+    tr1 = workloads.collective_trace(plan1, hosts, size, **kw)
+    cfg = SimConfig(scheme="seqbalance", duration_s=duration_s)
+    r_base, _ = sweep.run_one(topo_sym, cfg, tr0)
+    r_plan1, _ = sweep.run_one(topo_sym, cfg, tr1)
+    r_zero, _ = sweep.run_one(topo_sym, cfg, tr0, reorder=0.0)
+    stats = [_censored_p99(r, tr0, duration_s)
+             for r in (r_base, r_plan1, r_zero)]
+    diff = max(abs(a - b) for s in stats[1:]
+               for a, b in zip(stats[0], s))
+    emit("flowcell_degenerate", 0.0, f"max_stat_diff_{diff}")
+
+    PERF["flowcell"] = dict(
+        fast=fast, flowcells=fcells, budgets=[float(b) for b in budgets],
+        duration_s=duration_s, size_bytes=size, round_gap_s=gap,
+        grids=grids,
+        free_beats_seqbalance=bool(free_wins),
+        gbn_loses_on_symmetric=bool(gbn_loses),
+        rebuilds_after_first=int(rebuilds),
+        degenerate_stat_diff=float(diff),
+        wall_s=round(wall_grid, 2),
+    )

@@ -30,12 +30,14 @@ def main() -> None:
     from benchmarks.bench_collectives import bench_collectives
     from benchmarks.bench_cosim import bench_cosim, bench_faults, \
         bench_telemetry
+    from benchmarks.bench_flowcell import bench_flowcell
     from benchmarks.bench_kernels import bench_kernels
     from benchmarks.bench_obs import bench_obs
 
     benches = list(paper_benches.ALL) + [bench_collectives, bench_kernels,
                                          bench_cosim, bench_faults,
-                                         bench_telemetry, bench_obs]
+                                         bench_telemetry, bench_obs,
+                                         bench_flowcell]
     if args.profile:
         benches.append(paper_benches.bench_profile_phases)
     print("name,us_per_call,derived")

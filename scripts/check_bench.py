@@ -372,6 +372,70 @@ def check_obs(new: dict | None, base: dict | None) -> int:
     return 0 if ok else 1
 
 
+def check_flowcell(new: dict | None, base: dict | None) -> int:
+    """Flowcell/reordering-cost gate (BENCH_netsim.json["flowcell"],
+    DESIGN.md §17):
+
+      * the acceptance shape must hold IN the fresh run: flowcell spraying
+        beats SeqBalance's censored p99 only in the cost-free arm
+        (reorder=None) and loses at the strictest go-back-N budget on the
+        symmetric fabric — the paper's no-reordering trade, quantified;
+      * the hetero (mixed 100G/400G) grid must be present — the fabric
+        where inter-path skew is structural, not transient;
+      * zero sweep-executable rebuilds after epoch 0 in the solo co-sim
+        with flowcells and the reorder budget live (spray is a traced
+        trace column, the budget a traced scalar — neither may recompile);
+      * the degenerate arms (flowcells=1 plan, reorder=0 on an unsprayed
+        trace) must match the classic path with stat diff EXACTLY 0."""
+    if not new:
+        print("FAIL: new record has no flowcell entry "
+              "(did --only flowcell run?)")
+        return 1
+    ok = True
+
+    wins = bool(new.get("free_beats_seqbalance"))
+    verdict = "OK" if wins else "FAIL"
+    ok &= wins
+    print(f"{verdict}: cost-free flowcell beats SeqBalance p99: {wins}")
+
+    loses = bool(new.get("gbn_loses_on_symmetric"))
+    verdict = "OK" if loses else "FAIL"
+    ok &= loses
+    print(f"{verdict}: strict-budget flowcell loses to SeqBalance on the "
+          f"symmetric fabric: {loses}")
+
+    het = (new.get("grids") or {}).get("hetero") or {}
+    has_het = bool(het) and "flowcell_free" in het and "seqbalance" in het
+    verdict = "OK" if has_het else "FAIL"
+    ok &= has_het
+    print(f"{verdict}: hetero grid recorded ({len(het)} arms)")
+
+    rb = new.get("rebuilds_after_first", -1)
+    verdict = "OK" if rb == 0 else "FAIL"
+    ok &= rb == 0
+    print(f"{verdict}: cosim rebuilds after epoch 0 with flowcells live: "
+          f"{rb}")
+
+    diff = new.get("degenerate_stat_diff", float("inf"))
+    verdict = "OK" if diff == 0.0 else "FAIL"
+    ok &= diff == 0.0
+    print(f"{verdict}: degenerate-arm stat diff {diff} (must be exactly 0)")
+
+    if base and base.get("grids"):
+        b_sym = (base["grids"].get("symmetric") or {}).get("flowcell_free")
+        n_sym = (new["grids"].get("symmetric") or {}).get("flowcell_free")
+        if b_sym and n_sym:
+            limit = b_sym["p99_us"] * 1.30
+            good = n_sym["p99_us"] <= limit
+            verdict = "OK" if good else "FAIL"
+            ok &= good
+            print(f"{verdict}: cost-free flowcell p99 {n_sym['p99_us']:.0f}us"
+                  f" (baseline {b_sym['p99_us']:.0f}us, limit {limit:.0f}us)")
+    else:
+        print("WARN: baseline has no flowcell grids; in-run gates only")
+    return 0 if ok else 1
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("new", help="fresh bench JSON (the run under test)")
@@ -395,6 +459,11 @@ def main() -> int:
                     help="gate the observability record (recording overhead "
                          "floor, zero recorder rebuilds, full flight-log "
                          "epoch coverage) instead of the fig12 sweep")
+    ap.add_argument("--flowcell", action="store_true",
+                    help="gate the flowcell/reordering-cost record (free-arm "
+                         "win + strict-budget loss vs SeqBalance, hetero "
+                         "grid present, zero rebuilds, exact degenerate "
+                         "stat match) instead of the fig12 sweep")
     ap.add_argument("--telemetry", action="store_true",
                     help="gate the degraded-telemetry rows (perfect-channel "
                          "bit-identity, lossy/delayed reconvergence, plan-"
@@ -416,6 +485,13 @@ def main() -> int:
         with open(args.baseline) as f:
             base_o = json.load(f).get("obs")
         return check_obs(new_o, base_o)
+
+    if args.flowcell:
+        with open(args.new) as f:
+            new_fc = json.load(f).get("flowcell")
+        with open(args.baseline) as f:
+            base_fc = json.load(f).get("flowcell")
+        return check_flowcell(new_fc, base_fc)
 
     if args.telemetry:
         with open(args.new) as f:

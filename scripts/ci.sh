@@ -4,7 +4,7 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-python -m pytest -x -q
+python -m pytest -x -q --durations=15
 
 # dist layer under a forced 8-device host platform: re-runs the planning /
 # sharding / co-sim tests with the sweep runner actually sharding over 8
@@ -227,4 +227,43 @@ EOF4
 if [ -z "${REPRO_CI_SKIP_BENCH_GATE:-}" ]; then
   python -m benchmarks.run --only obs --json /tmp/BENCH_obs.json
   python scripts/check_bench.py /tmp/BENCH_obs.json BENCH_netsim.json --obs
+fi
+
+# flowcell smoke on the forced 8-device platform: a flowcell-split plan
+# (chunks sprayed over every active path) plus a live go-back-N reorder
+# budget must run through the co-sim loop with ZERO executable rebuilds
+# after epoch 0 (spray is a traced trace column, the budget a traced
+# scalar operand — one compiled program covers every split factor and
+# budget), and the degenerate settings (flowcells=1, budget unset) must
+# leave the driver bit-identical to the classic path.
+XLA_FLAGS="--xla_force_host_platform_device_count=8" python - <<'EOF5'
+from repro.dist import cosim
+from repro.netsim import topology
+
+topo = topology.leaf_spine(4, 4, 4, 100e9)
+hosts = cosim.ring_hosts(topo, 8)
+kw = dict(scheme="seqbalance", epochs=3, phi_steps=2, n_chunks=4, seed=0,
+          faults=(cosim.kill_spine(topo, 2, epoch=1),))
+h_fc = cosim.run_cosim(topo, hosts, 4e6, flowcells=4, reorder_budget=16.0,
+                       **kw)
+builds_late = sum(r.new_builds for r in h_fc.records[1:])
+assert builds_late == 0, f"{builds_late} rebuilds after epoch 0"
+h0 = cosim.run_cosim(topo, hosts, 4e6, **kw)
+h1 = cosim.run_cosim(topo, hosts, 4e6, flowcells=1, reorder_budget=None,
+                     **kw)
+assert [r.fct_p99_s for r in h0.records] == [r.fct_p99_s for r in h1.records]
+print(f"flowcell smoke: 3-epoch co-sim with flowcells=4 / budget=16 MTU, "
+      f"0 rebuilds after epoch 0, degenerate knobs bit-identical")
+EOF5
+
+# flowcell gate: rerun the flowcell bench and fail if spraying stops
+# beating SeqBalance in the cost-free arm, stops losing at the strict
+# go-back-N budget on the symmetric fabric (the paper's no-reordering
+# motivation, quantified), if the hetero-fabric grid goes missing, if the
+# co-sim rebuilt an executable after epoch 0, or if the degenerate arms'
+# stat diff is not EXACTLY zero.
+if [ -z "${REPRO_CI_SKIP_BENCH_GATE:-}" ]; then
+  python -m benchmarks.run --only flowcell --json /tmp/BENCH_flowcell.json
+  python scripts/check_bench.py /tmp/BENCH_flowcell.json BENCH_netsim.json \
+    --flowcell
 fi

@@ -46,6 +46,26 @@ def letflow_paths(
     return jnp.where(gap, rand_path, cur_paths)
 
 
+def flowlet_wcmp_paths(
+    cur_paths: jax.Array, gap: jax.Array, rng_u32: jax.Array, weights: jax.Array
+) -> jax.Array:
+    """Flowlet-timeout controller with CAPACITY-WEIGHTED re-draws (the
+    asymmetric-topology variant of the Harvard CS145 flowlet controller):
+    keep the current path unless a flowlet gap occurred, in which case draw
+    the next path from the WCMP distribution ``weights`` (f32[n_paths],
+    summing to 1) via cumulative-weight inversion of the per-flow uniform
+    ``rng_u32 / 2^32``.  On a symmetric fabric the weights are uniform and
+    this degenerates to ``letflow_paths``; on a mixed 100G/400G fabric the
+    fat uplinks absorb proportionally more flowlets — the fix the plain
+    random re-draw lacks."""
+    n_paths = weights.shape[-1]
+    cum = jnp.cumsum(weights, axis=-1)  # [..., P], last entry ~1.0
+    u = rng_u32.astype(jnp.float32) * jnp.float32(1.0 / 4294967296.0)
+    pick = jnp.sum((u[..., None] >= cum).astype(jnp.int32), axis=-1)
+    pick = jnp.clip(pick, 0, n_paths - 1).astype(jnp.int32)
+    return jnp.where(gap, pick, cur_paths)
+
+
 def conga_paths(
     cur_paths: jax.Array, gap: jax.Array, path_congestion: jax.Array
 ) -> jax.Array:

@@ -49,6 +49,17 @@ class PathPlan:
     inactive: tuple[bool, ...] | None = None
     wire_dtype: str = "float32"
     version: int = 0
+    # token-based flowcell splitting BELOW the chunk (RDMACell's granularity,
+    # the "other side" of the paper's no-reordering trade): each chunk's wire
+    # traffic is cut into `flowcells` equal token cells, round-robined over
+    # the active paths — so one chunk STRADDLES min(flowcells, n_active)
+    # paths and pays the reordering cost the fluid model charges via
+    # dataplane.reorder_gbn_factor.  flowcells=1 is bit-exactly the classic
+    # per-chunk plan.  `reorder_budget` is the NIC's out-of-order absorption
+    # in packets (0 = strict go-back-N); it rides along to the sim as the
+    # traced `reorder` operand.
+    flowcells: int = 1
+    reorder_budget: float = 0.0
 
     def __post_init__(self):
         assert self.n_chunks >= 1
@@ -57,6 +68,8 @@ class PathPlan:
             object.__setattr__(self, "inactive", (False,) * len(self.directions))
         assert len(self.inactive) == len(self.directions)
         assert self.wire_dtype in ("float32", "bfloat16", "int8"), self.wire_dtype
+        assert self.flowcells >= 1, self.flowcells
+        assert self.reorder_budget >= 0.0, self.reorder_budget
 
     @property
     def n_paths(self) -> int:
@@ -74,6 +87,19 @@ class PathPlan:
             active = [0]
         return tuple(active[c % len(active)] for c in range(self.n_chunks))
 
+    def flowcell_paths(self) -> tuple[tuple[int, ...], ...]:
+        """Per-chunk flowcell -> path table: chunk c's cell j rides path
+        ``active[(c + j) % n_active]`` — cell 0 is the chunk's classic
+        round-robin path (so ``flowcells=1`` degenerates exactly to
+        ``chunk_paths``), later cells walk the remaining active paths."""
+        active = [p for p, dead in enumerate(self.inactive) if not dead]
+        if not active:
+            active = [0]
+        return tuple(
+            tuple(active[(c + j) % len(active)] for j in range(self.flowcells))
+            for c in range(self.n_chunks)
+        )
+
 
 @dataclasses.dataclass(frozen=True)
 class PinnedPlan:
@@ -90,11 +116,15 @@ class PinnedPlan:
     paths: tuple[int, ...]  # chunk c -> path paths[c]
     wire_dtype: str = "float32"
     version: int = 0
+    flowcells: int = 1
+    reorder_budget: float = 0.0
 
     def __post_init__(self):
         assert len(self.paths) == self.n_chunks, (self.paths, self.n_chunks)
         assert len(self.inactive) == len(self.directions)
         assert all(0 <= p < len(self.directions) for p in self.paths)
+        assert self.flowcells >= 1, self.flowcells
+        assert self.reorder_budget >= 0.0, self.reorder_budget
 
     @property
     def n_paths(self) -> int:
@@ -102,6 +132,21 @@ class PinnedPlan:
 
     def chunk_paths(self) -> tuple[int, ...]:
         return tuple(self.paths)
+
+    def flowcell_paths(self) -> tuple[tuple[int, ...], ...]:
+        """Cell 0 keeps the PINNED path verbatim (replanning decided it);
+        later cells walk the active paths from the pinned one."""
+        active = [p for p, dead in enumerate(self.inactive) if not dead]
+        if not active:
+            active = [0]
+        out = []
+        for c, p0 in enumerate(self.paths):
+            base = active.index(p0) if p0 in active else 0
+            cells = (p0,) + tuple(
+                active[(base + j) % len(active)] for j in range(1, self.flowcells)
+            )
+            out.append(cells)
+        return tuple(out)
 
 
 def apply_plan(current, candidate) -> tuple[object, bool]:

@@ -349,6 +349,8 @@ def run_cosim(
     blackout_epochs: int = 3,
     record=None,
     flight=None,
+    flowcells: int = 1,
+    reorder_budget: float | None = None,
     **cfg_kw,
 ) -> CosimHistory:
     """Run ``epochs`` plan -> sim -> health cycles over a fault schedule.
@@ -436,6 +438,22 @@ def run_cosim(
         a perfetto timeline; ``obs.features.epoch_matrix`` lifts it into
         [epoch, uplink, feature] arrays.  A path is opened/closed by this
         call; an instance is shared (caller closes).
+
+    Flowcell extensions (DESIGN.md §17; defaults are bit-identical to the
+    pre-flowcell driver):
+
+      * ``flowcells`` > 1 splits every chunk-QP into that many flowcells
+        sprayed round-robin over the plan's active paths (each cell keeps
+        its own five-tuple, so the split reuses the steering machinery —
+        the trace just carries more, smaller flows plus a ``spray``
+        column).
+      * ``reorder_budget`` (packets, or None) turns on the explicit
+        reordering-cost model: sprayed flows pay the go-back-N
+        amplification ``dataplane.reorder_gbn_factor`` charges for
+        inter-path skew beyond the budget.  It rides the sweep as a traced
+        scalar operand, so every epoch and every budget reuses ONE
+        compiled program; ``None`` traces the identical pre-flowcell
+        program (the "reordering is free" bench arm).
     """
     from repro.dist import collectives
     from repro.netsim import compact, metrics, sweep, workloads
@@ -497,6 +515,20 @@ def run_cosim(
         spec_key["record"] = dict(
             ring_chunks=int(record.ring_chunks),
             quantiles=[float(q) for q in record.quantiles])
+    if flowcells != 1 or reorder_budget is not None:
+        # same legacy-journal convention as ``record``: the key exists only
+        # when the feature is used, so pre-flowcell journals still match
+        spec_key["flowcell"] = dict(
+            flowcells=int(flowcells),
+            reorder_budget=None if reorder_budget is None
+            else float(reorder_budget))
+
+    def _fc(p):
+        # stamp the split factor onto every plan the driver runs; plans are
+        # frozen dataclasses, so this is a copy — health/journal state keeps
+        # the unstamped originals
+        return dataclasses.replace(p, flowcells=int(flowcells)) \
+            if flowcells != 1 else p
     journal_fh = None
     if journal is not None:
         import json
@@ -642,18 +674,18 @@ def run_cosim(
                             tgt_b[c, i] = surv[k % len(surv)]
                             k += 1
                 tr_a = workloads.collective_trace(
-                    plan, hosts, size_bytes, link_bw=fabric_bw,
+                    _fc(plan), hosts, size_bytes, link_bw=fabric_bw,
                     round_gap_s=gap_e, rounds=replan_round, seed=seed,
                     steer_paths=steer_p, steer_targets=tgt)
                 tr_b = workloads.collective_trace(
-                    pinned, hosts, size_bytes, link_bw=fabric_bw,
+                    _fc(pinned), hosts, size_bytes, link_bw=fabric_bw,
                     round_gap_s=gap_e, rounds=rounds - replan_round,
                     start_s=replan_round * gap_e, seed=seed,
                     steer_paths=steer_p, steer_targets=tgt_b)
                 trace = workloads.merge_traces(tr_a, tr_b)
             else:
                 trace = workloads.collective_trace(
-                    run_plan, hosts, size_bytes, link_bw=fabric_bw,
+                    _fc(run_plan), hosts, size_bytes, link_bw=fabric_bw,
                     round_gap_s=gap_e, seed=seed, steer_paths=steer_p)
             if W is None:
                 W = int(trace.valid.sum())  # spill-proof: one slot per flow
@@ -662,7 +694,8 @@ def run_cosim(
             b0 = sweep.cache_stats()["builds"]
             result, outs = sweep.run_one(topo, cfg, trace, capacity=cap,
                                          loss=loss, cap_seg_steps=cap_seg,
-                                         window_slots=W, record=record)
+                                         window_slots=W, record=record,
+                                         reorder=reorder_budget)
             new_builds = sweep.cache_stats()["builds"] - b0
             insim = None
             if record is not None and getattr(result, "ring", None) is not None:

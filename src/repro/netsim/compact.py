@@ -69,6 +69,7 @@ class SlotCache(NamedTuple):
     fid: jax.Array  # u32[W] flow id (flowlet reroute rng)
     src: jax.Array  # i32[W] source host (DRILL spray)
     dst: jax.Array  # i32[W]
+    spray: jax.Array  # i32[W] straddled-path count (flowcell reorder cost)
 
 
 class CompactState(NamedTuple):
@@ -188,6 +189,7 @@ def init_compact_state(
         fid=jnp.zeros((W,), jnp.uint32),
         src=jnp.zeros((W,), jnp.int32),
         dst=jnp.zeros((W,), jnp.int32),
+        spray=jnp.ones((W,), jnp.int32),
     )
     return CompactState(
         slot_fid=jnp.full((W,), F_pad, jnp.int32),
@@ -212,9 +214,12 @@ def build_compact_sim(topo: Topology, cfg: SimConfig, trace_arrays, W: int, F_pa
                       A: int = 256, gate_admission: bool = False,
                       capacity: jax.Array | None = None,
                       loss: jax.Array | None = None,
-                      cap_seg_steps: int = 0):
-    """trace_arrays = (sizes, arrivals, src, dst, fid, valid), SORTED by
-    arrival (invalid flows last, arrival=+inf), padded to F_pad.
+                      cap_seg_steps: int = 0,
+                      reorder: jax.Array | None = None):
+    """trace_arrays = (sizes, arrivals, src, dst, fid, valid[, spray]),
+    SORTED by arrival (invalid flows last, arrival=+inf), padded to F_pad;
+    the optional 7th ``spray`` column (i32, defaulted to ones) is the
+    straddled-path count flowcell splitting stamps on each flow.
     ``A`` is the admission lane width: at most A flows admit per step, and
     admission-time work (path selection, route-cache fills, slot resets)
     runs on [A]-shaped rank arrays rather than the full [W] window.
@@ -238,10 +243,19 @@ def build_compact_sim(topo: Topology, cfg: SimConfig, trace_arrays, W: int, F_pa
     (faults.LossyLink): delivered throughput deflates by the go-back-N
     goodput factor along each sub-flow's hops while offered load stays at
     the DCQCN rate — retransmissions ride the wire (paper Table 1).
+    ``reorder`` (f32 scalar, traced) is the flowcell reordering budget in
+    packets: delivered throughput divides by
+    ``dataplane.reorder_gbn_factor`` wherever the spray column says a
+    flow's parent chunk straddles more than one path.  ``None`` (Python
+    gate, same convention as ``loss``) traces the exact pre-flowcell
+    program — the degenerate pin AND the "cost-free reordering" bench arm.
     Returns (init_state, step_fn, phases) — ``phases`` maps the profile
     phase names (admit / cascade / dcqcn / finish) to the closures
     ``step_fn`` composes, for benchmarks/run.py --profile."""
-    sizes, arrivals, src, dst, fid, valid = (jnp.asarray(a) for a in trace_arrays)
+    arrs = tuple(jnp.asarray(a) for a in trace_arrays)
+    if len(arrs) == 6:  # legacy 6-tuple: no flowcell splitting anywhere
+        arrs = arrs + (jnp.ones_like(arrs[2]),)
+    sizes, arrivals, src, dst, fid, valid, spray_f = arrs
     N = cfg.n_sub
     P = topo.n_paths
     nl = topo.n_links
@@ -271,11 +285,15 @@ def build_compact_sim(topo: Topology, cfg: SimConfig, trace_arrays, W: int, F_pa
     qmask = dataplane.queue_mask_for(topo)
     dparams = cfg.dcqcn
 
-    if cfg.scheme in ("conga", "drill"):
+    if cfg.scheme in ("conga", "drill", "flowlet_timeout"):
         assert topo.kind == "leaf_spine", f"{cfg.scheme} is 2-tier only (paper §IV.B)"
     if loss_vec is not None:
         assert cfg.scheme != "drill", \
             "lossy links + DRILL spray unsupported (spray has no pinned hops)"
+    if reorder is not None:
+        assert topo.kind == "leaf_spine", "reorder cost model is 2-tier only"
+        assert cfg.scheme != "drill", \
+            "DRILL carries its own gbn factor (drill_gbn_factor)"
 
     def init_state() -> CompactState:
         return init_compact_state(topo, cfg, W, F_pad, capacity=capacity)
@@ -330,6 +348,7 @@ def build_compact_sim(topo: Topology, cfg: SimConfig, trace_arrays, W: int, F_pa
             fid=ca.fid.at[slot_of_rank].set(fid[rank_fid], mode="drop"),
             src=ca.src.at[slot_of_rank].set(src_a, mode="drop"),
             dst=ca.dst.at[slot_of_rank].set(dst_a, mode="drop"),
+            spray=ca.spray.at[slot_of_rank].set(spray_f[rank_fid], mode="drop"),
         )
 
         # reset admitted slots (rank -> slot scatters)
@@ -357,7 +376,7 @@ def build_compact_sim(topo: Topology, cfg: SimConfig, trace_arrays, W: int, F_pa
             s5_a = tuple(a[rank_fid] for a in fc.s5)  # each [A, N]
             p_new = routing.select_paths(*s5_a, rows, P)  # [A, N]
             path = path.at[slot_of_rank].set(p_new, mode="drop")
-        elif cfg.scheme in ("ecmp", "letflow", "conga"):
+        elif cfg.scheme in ("ecmp", "letflow", "conga", "flowlet_timeout"):
             f5_a = tuple(a[rank_fid] for a in fc.f5)  # each [A]
             p_new = routing.ecmp_paths(*f5_a, P)[:, None]  # [A, 1]
             path = path.at[slot_of_rank].set(p_new, mode="drop")
@@ -389,7 +408,7 @@ def build_compact_sim(topo: Topology, cfg: SimConfig, trace_arrays, W: int, F_pa
                 state.admitted < n_valid_total, _admission, lambda s: s, state)
         else:
             st = _admission(state)
-        if cfg.scheme in ("letflow", "conga"):
+        if cfg.scheme in ("letflow", "conga", "flowlet_timeout"):
             # reroute EXISTING slots at flowlet gaps; newly admitted slots
             # keep their ECMP placement (occ_prev is pre-admission)
             rng = hashing.fmix32(
@@ -400,6 +419,16 @@ def build_compact_sim(topo: Topology, cfg: SimConfig, trace_arrays, W: int, F_pa
             )
             if cfg.scheme == "letflow":
                 p_re = baselines.letflow_paths(st.path[:, 0], gap, rng, P)
+            elif cfg.scheme == "flowlet_timeout":
+                # WCMP flowlet re-draw weighted by the CURRENT per-leaf
+                # uplink capacities (traced schedules included) — the
+                # asymmetric-topology flowlet controller: fat uplinks
+                # absorb proportionally more flowlets.
+                capv_a = cap_of(st.step)
+                cap_up = capv_a[: topo.n_leaf * P].reshape(topo.n_leaf, P)
+                w_leaf = baselines.wcmp_weights(cap_up)  # [L, P]
+                p_re = baselines.flowlet_wcmp_paths(
+                    st.path[:, 0], gap, rng, w_leaf[st.cache.sleaf])
             else:
                 pq = dataplane.path_queue_2tier(
                     topo, st.queue, st.cache.sleaf, st.cache.dleaf)
@@ -457,6 +486,20 @@ def build_compact_sim(topo: Topology, cfg: SimConfig, trace_arrays, W: int, F_pa
                     fab, ca.tx, ca.rx, loss_vec, n_links=nl,
                     window_pkts=cfg.gbn_window_pkts,
                 )
+            if reorder is not None:
+                # flowcell reordering cost: every delivered byte of a
+                # path-straddling chunk costs 1 + p_ooo*W/2 wire bytes
+                # (go-back-N rewinds); offered load stays at the DCQCN
+                # rate — the retransmitted bytes ride the wire, exactly
+                # the lossy_gbn_factor convention
+                pq = dataplane.path_queue_2tier(
+                    topo, state.queue, ca.sleaf, ca.dleaf)
+                thr = thr / dataplane.reorder_gbn_factor(
+                    topo, pq, ca.spray, rc[:, 0], reorder,
+                    mtu_bytes=dparams.mtu_bytes,
+                    jitter_mtus=cfg.drill_jitter_mtus,
+                    window_pkts=cfg.gbn_window_pkts, capacity=capv,
+                )[:, None]
         return arrival, new_queue, thr, p_sub, p_sub_fabric, rc, active
 
     def dcqcn_phase(state: CompactState, p_sub, active):
@@ -576,7 +619,9 @@ def build_compact_sim(topo: Topology, cfg: SimConfig, trace_arrays, W: int, F_pa
         def steady_or_idle(st: CompactState):
             occupied = st.slot_fid < F_pad
             idle = ~jnp.any(occupied)
-            if cfg.scheme == "drill":
+            if cfg.scheme == "drill" or reorder is not None:
+                # spray/reorder throughput depends on instantaneous queues,
+                # which drift inside a span — only idle spans fast-forward
                 return idle
             arrival, _, _, _, _, rc, active = cascade_phase(st)
             capv = cap_of(st.step)
@@ -592,7 +637,7 @@ def build_compact_sim(topo: Topology, cfg: SimConfig, trace_arrays, W: int, F_pa
                 True,
             ))
             steady = p_q & p_fin & p_cc
-            if cfg.scheme in ("letflow", "conga"):
+            if cfg.scheme in ("letflow", "conga", "flowlet_timeout"):
                 gap = baselines.flowlet_gap_occurs(
                     st.cc.rc[:, 0], dparams.mtu_bytes, cfg.flowlet_timeout)
                 steady &= ~jnp.any(gap & occupied)
@@ -696,7 +741,8 @@ def run_core(topo: Topology, cfg: SimConfig, W: int, F_pad: int, A: int,
              loss: jax.Array | None = None,
              cap_seg_steps: int = 0,
              gate_admission: bool = False,
-             record=None):
+             record=None,
+             reorder: jax.Array | None = None):
     """Jit-friendly core: sorted/padded trace arrays + a donatable +inf
     finish buffer in, (finish[F_pad] in sorted order, cnp_pkts, spill_steps,
     ff_steps, per-step outputs) out.  Wrapped and cached by netsim/sweep.py;
@@ -738,11 +784,16 @@ def run_core(topo: Topology, cfg: SimConfig, W: int, F_pad: int, A: int,
     before the recorder existed (bit-identical, sha-pinned), and because
     the ring's shapes depend only on the spec, recording costs exactly one
     extra executable per (shape bucket, spec) — never a rebuild across
-    epochs (DESIGN.md §16)."""
+    epochs (DESIGN.md §16).
+
+    ``reorder`` (f32 scalar, traced) switches on the flowcell
+    reordering-cost model — see ``build_compact_sim``; ``None`` traces the
+    identical pre-flowcell program (sha-pinned)."""
     _, step_fn, phases = build_compact_sim(topo, cfg, trace_arrays, W, F_pad,
                                            A, gate_admission=gate_admission,
                                            capacity=capacity, loss=loss,
-                                           cap_seg_steps=cap_seg_steps)
+                                           cap_seg_steps=cap_seg_steps,
+                                           reorder=reorder)
     init = init_compact_state(topo, cfg, W, F_pad, finish0, capacity=capacity)
     n_valid = jnp.sum(jnp.asarray(trace_arrays[5]).astype(jnp.int32))
     nl = topo.n_links
@@ -925,12 +976,13 @@ def sort_trace(trace: Trace) -> tuple[tuple, np.ndarray, int]:
         np.asarray(trace.dst, np.int32)[order],
         np.asarray(trace.flow_id, np.uint32)[order],
         valid[order],
+        np.asarray(trace.spray, np.int32)[order],
     )
     return arrays, inv, order.size
 
 
 def pad_trace_arrays(arrays: tuple, F_pad: int) -> tuple:
-    sizes, arr, src, dst, fid, valid = arrays
+    sizes, arr, src, dst, fid, valid, spray = arrays
     pad = F_pad - sizes.shape[0]
     assert pad >= 0, (sizes.shape[0], F_pad)
     if pad == 0:
@@ -942,6 +994,7 @@ def pad_trace_arrays(arrays: tuple, F_pad: int) -> tuple:
         np.concatenate([dst, np.zeros(pad, np.int32)]),
         np.concatenate([fid, np.zeros(pad, np.uint32)]),
         np.concatenate([valid, np.zeros(pad, bool)]),
+        np.concatenate([spray, np.ones(pad, np.int32)]),
     )
 
 
@@ -951,23 +1004,40 @@ def _run_single(topo, cfg, W, F_pad, A, n_steps, trace_arrays, finish0):
                     gate_admission=True)
 
 
+@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3, 4, 5), donate_argnums=(7,))
+def _run_single_reorder(topo, cfg, W, F_pad, A, n_steps, trace_arrays,
+                        finish0, reorder):
+    return run_core(topo, cfg, W, F_pad, A, n_steps, trace_arrays, finish0,
+                    gate_admission=True, reorder=reorder)
+
+
 def simulate_compact(
-    topo: Topology, cfg: SimConfig, trace: Trace, *, window_slots: int | None = None
+    topo: Topology, cfg: SimConfig, trace: Trace, *,
+    window_slots: int | None = None, reorder=None,
 ) -> tuple[CompactResult, StepOutputs]:
     """One-shot compact run (single trace; for sweeps use netsim/sweep.py).
 
     Drop-in for ``engine.simulate`` where only finish times / CNP counts /
-    per-step outputs are consumed."""
+    per-step outputs are consumed.  ``reorder`` (float packets or None)
+    enables the flowcell reordering cost as a traced budget."""
     arrays, inv, F = sort_trace(trace)
     F_pad = max(F, 1)
     W, A = plan_single_window(topo, cfg, arrays, F_pad)
     if window_slots is not None:  # explicit window: honor it exactly
         W = max(8, min(int(window_slots), F_pad))  # (tests probe spill)
     n_steps = int(round(cfg.duration_s / cfg.dt))
-    finish, cnp, spill, ff, outs = _run_single(
-        topo, cfg, W, F_pad, A, n_steps, tuple(jnp.asarray(a) for a in arrays),
-        jnp.full((F_pad,), jnp.inf, jnp.float32),
-    )
+    if reorder is None:
+        finish, cnp, spill, ff, outs = _run_single(
+            topo, cfg, W, F_pad, A, n_steps,
+            tuple(jnp.asarray(a) for a in arrays),
+            jnp.full((F_pad,), jnp.inf, jnp.float32),
+        )
+    else:
+        finish, cnp, spill, ff, outs = _run_single_reorder(
+            topo, cfg, W, F_pad, A, n_steps,
+            tuple(jnp.asarray(a) for a in arrays),
+            jnp.full((F_pad,), jnp.inf, jnp.float32), jnp.float32(reorder),
+        )
     res = CompactResult(
         finish=np.asarray(finish)[:F][inv],
         cnp_pkts=np.asarray(cnp),

@@ -280,6 +280,58 @@ def lossy_gbn_factor(
     return gbn.gbn_goodput_factor(p_loss, window_pkts)
 
 
+def reorder_gbn_factor(
+    topo: Topology,
+    pq: jax.Array,  # f32[n, P] per-path queue bytes (path_queue_2tier)
+    spray: jax.Array,  # i32[n] paths a flowcell-split chunk straddles (1 = pinned)
+    rc0: jax.Array,  # f32[n] per-flow offered rate (sub-flow 0)
+    reorder: jax.Array,  # f32 scalar reorder budget in packets (traced operand)
+    *,
+    mtu_bytes: float,
+    jitter_mtus: float,
+    window_pkts: float,
+    capacity: jax.Array | None = None,  # traced override of topo.capacity
+) -> jax.Array:
+    """Effective-bytes AMPLIFICATION >= 1 for flowcell-split flows: a chunk
+    sprayed over ``spray`` paths sees inter-path skew (queue divergence
+    across the straddled paths), and RoCE's go-back-N rewinds a half window
+    per out-of-order arrival — so every delivered byte costs
+    ``1 + p_ooo * W/2`` wire bytes.  The engine divides delivered ``thr``
+    by this factor (retransmitted bytes ARE offered load, exactly the
+    ``lossy_gbn_factor`` convention, just spelled as amplification so the
+    no-reordering invariant reads ``factor == 1``).
+
+    The skew model is ``drill_gbn_factor``'s, scaled by straddle coverage:
+    spraying over k of P paths sees fraction (k-1)/(P-1) of the full
+    inter-path spread (k=1 -> no skew, k=P -> the DRILL worst case).  The
+    NIC's ``reorder`` budget (packets it can re-sequence before a go-back-N
+    fires) buys back ``reorder * MTU / rate`` seconds of skew.  ``reorder``
+    is a TRACED scalar so one compiled program covers every budget;
+    ``spray`` is traced per-flow data so one program covers every split
+    factor.  Exactly 1.0 wherever ``spray <= 1`` (all flowcells on one
+    path: no reordering possible, the paper's invariant)."""
+    from repro.core import gbn
+
+    P = topo.n_paths
+    cap = topo.capacity if capacity is None else capacity
+    up_cap = cap[0]  # uplink block starts at 0 (2-tier layout)
+    d_path = pq * 8.0 / jnp.maximum(up_cap, 1.0)  # [n, P] seconds
+    dmax = jnp.max(d_path, -1)
+    dmin = jnp.min(d_path, -1)
+    full_spread = dmax - dmin  # skew across ALL P paths
+    k = jnp.clip(spray.astype(jnp.float32), 1.0, float(P))
+    frac = (k - 1.0) / jnp.float32(max(P - 1, 1))  # [n] straddle coverage
+    mean_q = jnp.mean(pq, -1)
+    jitter_bytes = jnp.minimum(0.5 * mean_q, jitter_mtus * mtu_bytes)
+    jitter = jitter_bytes * 8.0 / jnp.maximum(up_cap, 1.0)
+    skew = jnp.maximum(full_spread, jitter) * frac
+    budget_s = reorder * mtu_bytes * 8.0 / jnp.maximum(rc0, 1.0)
+    eff = jnp.maximum(skew - budget_s, 0.0)
+    p_ooo = gbn.ooo_probability(eff, rc0, mtu_bytes)
+    amp = 1.0 + p_ooo * (window_pkts / 2.0)
+    return jnp.where(spray > 1, amp, 1.0)
+
+
 def queue_mask_for(topo: Topology) -> jax.Array:
     """1.0 on links that queue and ECN-mark, 0.0 on host_tx (NIC-internal
     backlog, no ECN there) and on the -1 sentinel slot."""

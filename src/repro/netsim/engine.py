@@ -34,7 +34,7 @@ from repro.netsim import dataplane, dcqcn as dcqcn_mod
 from repro.netsim.topology import Topology
 from repro.netsim.workloads import Trace
 
-SCHEMES = ("seqbalance", "ecmp", "letflow", "conga", "drill")
+SCHEMES = ("seqbalance", "ecmp", "letflow", "conga", "drill", "flowlet_timeout")
 
 # A sub-flow is complete when its remaining bytes drop below this.  The
 # ``rc <= remaining*8/dt`` cap makes the last bytes decay geometrically, so
@@ -167,8 +167,15 @@ def line_rate_of(topo: Topology) -> jax.Array:
     return topo.capacity[topo.n_links - 2 * topo.n_hosts]  # host_tx[0] bw
 
 
-def build_sim(topo: Topology, cfg: SimConfig, trace: Trace):
-    """Returns (init_state, step_fn, static) for the given scheme/topo/trace."""
+def build_sim(topo: Topology, cfg: SimConfig, trace: Trace, reorder=None):
+    """Returns (init_state, step_fn, static) for the given scheme/topo/trace.
+
+    ``reorder`` (traced f32 scalar or None) switches on the flowcell
+    reordering-cost model: delivered throughput divides by
+    ``dataplane.reorder_gbn_factor`` wherever the trace's ``spray`` column
+    says a flow's parent chunk straddles >1 path.  ``None`` compiles the
+    exact pre-flowcell program (the Python-level gate, same convention as
+    the compact engine's ``loss``)."""
     F = len(trace.sizes)
     N = cfg.n_sub
     P = topo.n_paths
@@ -179,6 +186,7 @@ def build_sim(topo: Topology, cfg: SimConfig, trace: Trace):
     dst = jnp.asarray(trace.dst)
     fid = jnp.asarray(trace.flow_id)
     valid = jnp.asarray(trace.valid)
+    spray = jnp.asarray(trace.spray)
 
     fc = flow_constants(topo, cfg, sizes, src, dst, fid)
     sub_sizes, s5, f5, sub_salt = fc.sub_sizes, fc.s5, fc.f5, fc.sub_salt
@@ -186,8 +194,16 @@ def build_sim(topo: Topology, cfg: SimConfig, trace: Trace):
     line_rate = line_rate_of(topo)
     qmask = dataplane.queue_mask_for(topo)
 
-    if cfg.scheme in ("conga", "drill"):
+    if cfg.scheme in ("conga", "drill", "flowlet_timeout"):
         assert topo.kind == "leaf_spine", f"{cfg.scheme} is 2-tier only (paper §IV.B)"
+    if reorder is not None:
+        assert topo.kind == "leaf_spine", "reorder cost model is 2-tier only"
+    if cfg.scheme == "flowlet_timeout":
+        # WCMP re-draw weights: the per-leaf uplink capacities (the
+        # asymmetric-topology flowlet controller — fat uplinks absorb
+        # proportionally more flowlets; uniform capacities -> LetFlow).
+        cap_up = topo.capacity[: topo.n_leaf * P].reshape(topo.n_leaf, P)
+        up_w = baselines.wcmp_weights(cap_up)  # [L, P]
 
     nl = topo.n_links
     tx_link, rx_link = topo.nic_links(src, dst)  # i32[F] — path-independent
@@ -234,7 +250,7 @@ def build_sim(topo: Topology, cfg: SimConfig, trace: Trace):
         elif cfg.scheme == "ecmp":
             p_new = routing.ecmp_paths(*f5, P)[:, None]
             path = jnp.where(newly[:, None], p_new, path)
-        elif cfg.scheme in ("letflow", "conga"):
+        elif cfg.scheme in ("letflow", "conga", "flowlet_timeout"):
             rng = hashing.fmix32(fid ^ _u32(state.step) * _u32(0x85EBCA77))
             p_init = routing.ecmp_paths(*f5, P)
             gap = baselines.flowlet_gap_occurs(
@@ -242,6 +258,8 @@ def build_sim(topo: Topology, cfg: SimConfig, trace: Trace):
             )
             if cfg.scheme == "letflow":
                 p_re = baselines.letflow_paths(path[:, 0], gap, rng, P)
+            elif cfg.scheme == "flowlet_timeout":
+                p_re = baselines.flowlet_wcmp_paths(path[:, 0], gap, rng, up_w[src_leaf])
             else:
                 # CONGA reroutes to the least-congested path, but only at a
                 # flowlet boundary; initial placement stays hash-based (the
@@ -297,6 +315,15 @@ def build_sim(topo: Topology, cfg: SimConfig, trace: Trace):
             p_sub, p_sub_fabric = dataplane.subflow_mark_probs_nic(
                 fab, tx_link, rx_link, p_mark, nl
             )
+            if reorder is not None:
+                pq = dataplane.path_queue_2tier(topo, state.queue, src_leaf, dst_leaf)
+                amp = dataplane.reorder_gbn_factor(
+                    topo, pq, spray, rc[:, 0], reorder,
+                    mtu_bytes=dparams.mtu_bytes,
+                    jitter_mtus=cfg.drill_jitter_mtus,
+                    window_pkts=cfg.gbn_window_pkts,
+                )
+                thr = thr / amp[:, None]
 
         # ---------------- transfer progress & CQE ----------------
         delivered = thr * cfg.dt / 8.0  # bytes
@@ -363,8 +390,26 @@ def _run(topo: Topology, cfg: SimConfig, trace_arrays):
     return final, outs
 
 
-def simulate(topo: Topology, cfg: SimConfig, trace: Trace) -> tuple[SimState, StepOutputs]:
-    """Run the fluid simulation; returns (final_state, per-step outputs)."""
-    arrays = (trace.sizes, trace.arrivals, trace.src, trace.dst, trace.flow_id, trace.valid)
+@functools.partial(jax.jit, static_argnums=(0, 1))
+def _run_reorder(topo: Topology, cfg: SimConfig, trace_arrays, reorder):
+    trace = Trace(*trace_arrays)
+    init_state, step_fn = build_sim(topo, cfg, trace, reorder=reorder)
+    n_steps = int(round(cfg.duration_s / cfg.dt))
+    final, outs = jax.lax.scan(step_fn, init_state(), None, length=n_steps)
+    return final, outs
+
+
+def simulate(
+    topo: Topology, cfg: SimConfig, trace: Trace, reorder=None
+) -> tuple[SimState, StepOutputs]:
+    """Run the fluid simulation; returns (final_state, per-step outputs).
+
+    ``reorder`` (float packets or None) enables the flowcell reordering
+    cost as a TRACED budget: one compiled program per (topo, cfg) covers
+    every budget value.  ``None`` dispatches the pre-flowcell program."""
+    arrays = (trace.sizes, trace.arrivals, trace.src, trace.dst,
+              trace.flow_id, trace.valid, trace.spray)
     arrays = tuple(jnp.asarray(a) for a in arrays)
-    return _run(topo, cfg, arrays)
+    if reorder is None:
+        return _run(topo, cfg, arrays)
+    return _run_reorder(topo, cfg, arrays, jnp.float32(reorder))

@@ -197,55 +197,75 @@ def _f_bucket(F: int) -> int:
     return b
 
 
+_OP_NAMES = ("capacity", "loss", "reorder")
+
+
+def _op_kw(ops_sig: tuple) -> tuple:
+    """Traced-operand names selected by the (has_capacity, has_loss,
+    has_reorder) signature — positional operands after (trace_arrays,
+    finish0) map onto ``run_core`` keywords in this fixed order."""
+    return tuple(n for n, has in zip(_OP_NAMES, ops_sig) if has)
+
+
 def _gated_b1(topo: Topology, cfg: SimConfig, W: int, F_pad: int, A: int,
-              n_steps: int, cap_seg_steps: int = 0, record=None):
+              n_steps: int, cap_seg_steps: int = 0, record=None,
+              ops_sig: tuple = ()):
     """Single-sim callable over [1, ...]-leading inputs: no vmap wrapper,
     and the admission block gated behind a REAL lax.cond branch (vmap
     would lower it to both-branches + select) — once arrivals drain (3/4
     of the horizon on paper traces) the O(W) admission work is skipped
     outright.  Shared by the plain B=1 and the one-sim-per-device pmap
     dispatches.  Traced-operand dispatches pass extra UNBATCHED operands
-    (capacity, and with a fault campaign also the loss vector); the
-    ``*ops`` varargs forward them to ``run_core`` unchanged (same callable
-    serves every arity — the executable cache key distinguishes them)."""
+    (capacity, loss, reorder — flagged by ``ops_sig``); the ``*ops``
+    varargs map onto ``run_core`` keywords in that fixed order (same
+    callable serves every arity — the executable cache key distinguishes
+    them)."""
     core = functools.partial(compact.run_core, topo, cfg, W, F_pad, A,
                              n_steps, cap_seg_steps=cap_seg_steps,
                              gate_admission=True, record=record)
+    names = _op_kw(ops_sig)
 
     def fn_one(trace_arrays, finish0, *ops):
         squeeze = lambda a: jnp.squeeze(a, 0)
         out = core(jax.tree.map(squeeze, trace_arrays),
-                   jnp.squeeze(finish0, 0), *ops)
+                   jnp.squeeze(finish0, 0), **dict(zip(names, ops)))
         return jax.tree.map(lambda a: a[None], out)
 
     return fn_one
 
 
 def _compiled(topo: Topology, cfg: SimConfig, W: int, F_pad: int, A: int,
-              n_steps: int, batch: int, n_ops: int = 0,
+              n_steps: int, batch: int, ops_sig: tuple = (),
               cap_seg_steps: int = 0, cap_rows: int = 1, record=None):
-    """``n_ops`` counts the traced operands after (trace_arrays, finish0):
-    0 = none, 1 = capacity, 2 = capacity + loss.  ``cap_seg_steps`` and
-    ``cap_rows`` (K of a 2-D schedule) are static shape/stride facts that
-    must key the executable alongside the shapes.  ``record`` (hashable
-    ``obs.RecordSpec`` or None) keys the executable too: the ring buffer's
-    shapes are a pure function of the spec, so recording costs exactly one
-    extra program per (shape bucket, spec) and never a rebuild across
-    epochs — the contract ``check_bench.py --obs`` gates."""
-    key = (_topo_key(topo, n_ops > 0), cfg, W, F_pad, A, n_steps, batch,
-           n_ops, cap_seg_steps, cap_rows, record)
+    """``ops_sig`` flags the traced operands after (trace_arrays, finish0)
+    in the fixed order (capacity, loss, reorder) — e.g. (True, False, True)
+    = capacity + reorder.  ``cap_seg_steps`` and ``cap_rows`` (K of a 2-D
+    schedule) are static shape/stride facts that must key the executable
+    alongside the shapes.  ``record`` (hashable ``obs.RecordSpec`` or None)
+    keys the executable too: the ring buffer's shapes are a pure function
+    of the spec, so recording costs exactly one extra program per (shape
+    bucket, spec) and never a rebuild across epochs — the contract
+    ``check_bench.py --obs`` gates."""
+    key = (_topo_key(topo, bool(ops_sig)), cfg, W, F_pad, A, n_steps, batch,
+           ops_sig, cap_seg_steps, cap_rows, record)
     fn = _JIT_CACHE.get(key)
     if fn is None:
         if batch == 1:
             fn = jax.jit(_gated_b1(topo, cfg, W, F_pad, A, n_steps,
-                                   cap_seg_steps, record),
+                                   cap_seg_steps, record, ops_sig),
                          donate_argnums=(1,))
         else:
             core = functools.partial(compact.run_core, topo, cfg, W, F_pad,
                                      A, n_steps, cap_seg_steps=cap_seg_steps,
                                      record=record)
-            in_axes = (0, 0) + (None,) * n_ops
-            fn = jax.jit(jax.vmap(core, in_axes=in_axes), donate_argnums=(1,))
+            names = _op_kw(ops_sig)
+
+            def core_kw(trace_arrays, finish0, *ops):
+                return core(trace_arrays, finish0, **dict(zip(names, ops)))
+
+            in_axes = (0, 0) + (None,) * len(names)
+            fn = jax.jit(jax.vmap(core_kw, in_axes=in_axes),
+                         donate_argnums=(1,))
         _JIT_CACHE[key] = fn
         _CACHE_STATS["builds"] += 1
     else:
@@ -263,29 +283,34 @@ def sweep_devices() -> int:
 
 def _compiled_sharded(topo: Topology, cfg: SimConfig, W: int, F_pad: int,
                       A: int, n_steps: int, per_dev: int, n_dev: int,
-                      n_ops: int = 0, cap_seg_steps: int = 0,
+                      ops_sig: tuple = (), cap_seg_steps: int = 0,
                       cap_rows: int = 1, record=None):
     """pmap-of-vmap executable: inputs carry a leading [n_dev, per_dev]
     batch, one shard per local device.  Each shard runs the identical
     vmapped compact scan, so per-sim results match the single-device path
     (same program, same shapes — only the dispatch is parallel).  Traced
-    operands (capacity [+ loss]) are broadcast to every device
+    operands (capacity [+ loss] [+ reorder]) are broadcast to every device
     (in_axes None)."""
-    key = (_topo_key(topo, n_ops > 0), cfg, W, F_pad, A, n_steps, per_dev,
-           n_dev, n_ops, cap_seg_steps, cap_rows, record, "pmap")
+    key = (_topo_key(topo, bool(ops_sig)), cfg, W, F_pad, A, n_steps, per_dev,
+           n_dev, ops_sig, cap_seg_steps, cap_rows, record, "pmap")
     fn = _JIT_CACHE.get(key)
     if fn is None:
+        names = _op_kw(ops_sig)
         if per_dev == 1:
             # one sim per device: same gated, vmap-free core as the plain
             # batch==1 path
             inner = _gated_b1(topo, cfg, W, F_pad, A, n_steps, cap_seg_steps,
-                              record)
+                              record, ops_sig)
         else:
             core = functools.partial(
                 compact.run_core, topo, cfg, W, F_pad, A, n_steps,
                 cap_seg_steps=cap_seg_steps, record=record)
-            inner = jax.vmap(core, in_axes=(0, 0) + (None,) * n_ops)
-        in_axes = (0, 0) + (None,) * n_ops
+
+            def core_kw(trace_arrays, finish0, *ops):
+                return core(trace_arrays, finish0, **dict(zip(names, ops)))
+
+            inner = jax.vmap(core_kw, in_axes=(0, 0) + (None,) * len(names))
+        in_axes = (0, 0) + (None,) * len(names)
         fn = jax.pmap(inner, devices=jax.local_devices()[:n_dev],
                       donate_argnums=(1,), in_axes=in_axes)
         _JIT_CACHE[key] = fn
@@ -304,6 +329,7 @@ _SCHEME_SLACK = {
     "ecmp": (8.0, 100e-6),
     "letflow": (8.0, 100e-6),
     "conga": (8.0, 100e-6),
+    "flowlet_timeout": (8.0, 100e-6),
     "seqbalance": (12.0, 150e-6),
 }
 
@@ -373,7 +399,7 @@ def _trace_span(name: str = "repro.sweep.dispatch"):
 
 
 def _dispatch(topo, cfg, W, F_pad, A, n_steps, stacked, B, capacity=None,
-              loss=None, cap_seg_steps=0, record=None):
+              loss=None, cap_seg_steps=0, record=None, reorder=None):
     """Run a stacked [B, ...] batch, returning (finish, cnp, spill,
     ff_steps, outs) with a leading [B] axis.  >1 local device: pad B up to a multiple of
     the device count (duplicating the last row — padding results are
@@ -390,11 +416,15 @@ def _dispatch(topo, cfg, W, F_pad, A, n_steps, stacked, B, capacity=None,
     leaf with the same leading [B] axis."""
     assert loss is None or capacity is not None, \
         "loss operand requires an explicit capacity operand"
+    assert reorder is None or capacity is not None, \
+        "reorder operand requires an explicit capacity operand"
     ops = () if capacity is None else (jnp.asarray(capacity, jnp.float32),)
     if loss is not None:
         ops = ops + (jnp.asarray(loss, jnp.float32),)
-    n_ops = len(ops)
-    cap_rows = ops[0].shape[0] if n_ops and ops[0].ndim == 2 else 1
+    if reorder is not None:
+        ops = ops + (jnp.asarray(reorder, jnp.float32),)
+    ops_sig = (capacity is not None, loss is not None, reorder is not None)
+    cap_rows = ops[0].shape[0] if ops and ops[0].ndim == 2 else 1
     D = sweep_devices()
     if D > 1 and B > 1:
         D = min(D, B)
@@ -409,7 +439,7 @@ def _dispatch(topo, cfg, W, F_pad, A, n_steps, stacked, B, capacity=None,
             jnp.asarray(a.reshape((D, per) + a.shape[1:])) for a in stacked
         )
         fn = _compiled_sharded(topo, cfg, W, F_pad, A, n_steps, per, D,
-                               n_ops, cap_seg_steps, cap_rows, record)
+                               ops_sig, cap_seg_steps, cap_rows, record)
         finish0 = jnp.full((D, per, F_pad), jnp.inf, jnp.float32)
         with _trace_span():
             out = fn(shaped, finish0, *ops)
@@ -422,11 +452,11 @@ def _dispatch(topo, cfg, W, F_pad, A, n_steps, stacked, B, capacity=None,
         parts = [
             _dispatch(topo, cfg, W, F_pad, A, n_steps,
                       tuple(a[i:i + 1] for a in stacked), 1, capacity,
-                      loss, cap_seg_steps, record)
+                      loss, cap_seg_steps, record, reorder)
             for i in range(B)
         ]
         return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *parts)
-    fn = _compiled(topo, cfg, W, F_pad, A, n_steps, B, n_ops, cap_seg_steps,
+    fn = _compiled(topo, cfg, W, F_pad, A, n_steps, B, ops_sig, cap_seg_steps,
                    cap_rows, record)
     finish0 = jnp.full((B, F_pad), jnp.inf, jnp.float32)
     with _trace_span():
@@ -434,7 +464,7 @@ def _dispatch(topo, cfg, W, F_pad, A, n_steps, stacked, B, capacity=None,
 
 
 def _run_group(topo, cfg, prepped, n_steps, window_slots, capacity=None,
-               loss=None, cap_seg_steps=0, record=None):
+               loss=None, cap_seg_steps=0, record=None, reorder=None):
     """One vmapped run over traces sharing an F_pad bucket, with the
     spill-retry loop: the concurrency bound is a heuristic, so any sim that
     reports spill_steps > 0 (an arrived flow found no free slot — its
@@ -458,12 +488,13 @@ def _run_group(topo, cfg, prepped, n_steps, window_slots, capacity=None,
     pending = list(range(len(prepped)))
     while pending:
         stacked = tuple(
-            np.stack([padded[i][k] for i in pending]) for k in range(6)
+            np.stack([padded[i][k] for i in pending])
+            for k in range(len(padded[0]))
         )
         t0 = time.time()
         out = _dispatch(
             topo, cfg, W, F_pad, A, n_steps, stacked, len(pending), capacity,
-            loss, cap_seg_steps, record)
+            loss, cap_seg_steps, record, reorder)
         finish, cnp, spill, ff, outs = out[:5]
         ring = out[5] if len(out) > 5 else None
         spill = np.asarray(spill)
@@ -510,6 +541,7 @@ def run_batch(
     loss: np.ndarray | None = None,
     cap_seg_steps: int = 0,
     record=None,
+    reorder: float | None = None,
 ) -> tuple[list[compact.CompactResult], list[StepOutputs]]:
     """Run every trace under one (scheme, topology) static pair as vmapped,
     donated, cached-compile computations — one per F_pad shape bucket, so a
@@ -529,11 +561,18 @@ def run_batch(
     ``record`` (an ``obs.RecordSpec``) turns on the in-sim flight recorder:
     each result's ``ring`` field carries the per-chunk summary ring
     (drain with ``obs.drain``).  ``record=None`` is bit-identical to the
-    recorder not existing."""
+    recorder not existing.
+
+    ``reorder`` (scalar, packets) turns on the flowcell reordering-cost
+    model: flows whose trace ``spray`` column exceeds 1 pay a go-back-N
+    amplification from inter-path skew beyond the budget
+    (``dataplane.reorder_gbn_factor``).  Like loss it is a TRACED operand —
+    one compiled program covers every budget value and every split factor —
+    and ``reorder=None`` traces the identical pre-flowcell program."""
     assert traces, "empty sweep"
     enable_compile_cache()
     _maybe_start_jax_trace()
-    if loss is not None and capacity is None:
+    if (loss is not None or reorder is not None) and capacity is None:
         capacity = np.asarray(topo.capacity)
     prepped = [compact.sort_trace(t) for t in traces]
     n_steps = int(round(cfg.duration_s / cfg.dt))
@@ -545,7 +584,7 @@ def run_batch(
     for idxs in groups.values():
         res, outs = _run_group(topo, cfg, [prepped[i] for i in idxs], n_steps,
                                window_slots, capacity, loss, cap_seg_steps,
-                               record)
+                               record, reorder)
         for i, r, o in zip(idxs, res, outs):
             results[i] = r
             outs_list[i] = o
@@ -557,10 +596,12 @@ def run_one(topo: Topology, cfg: SimConfig, trace: Trace, *,
             capacity: np.ndarray | None = None,
             loss: np.ndarray | None = None,
             cap_seg_steps: int = 0,
-            record=None):
+            record=None,
+            reorder: float | None = None):
     results, outs = run_batch(topo, cfg, [trace], window_slots=window_slots,
                               capacity=capacity, loss=loss,
-                              cap_seg_steps=cap_seg_steps, record=record)
+                              cap_seg_steps=cap_seg_steps, record=record,
+                              reorder=reorder)
     return results[0], outs[0]
 
 

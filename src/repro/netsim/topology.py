@@ -335,3 +335,39 @@ def testbed_asymmetric() -> Topology:
 def sim_2tier() -> Topology:
     """Paper §IV.B: 8 leaves x 12 spines x 16 hosts, 100G everywhere."""
     return leaf_spine(8, 12, 16, 100e9, base_rtt_s=4e-6)
+
+
+def hetero_leaf_spine(
+    n_leaf: int = 4,
+    n_spine: int = 4,
+    hosts_per_leaf: int = 4,
+    slow_bw: float = 100e9,
+    fast_bw: float = 400e9,
+    n_fast_spines: int = 1,
+    host_bw: float | None = None,
+    base_rtt_s: float = 4e-6,
+) -> Topology:
+    """Mixed-speed 2-tier Clos: the last ``n_fast_spines`` spine planes run
+    at ``fast_bw`` (both the leaf uplinks up[l, s] and the downlinks
+    down[s, l]), the rest at ``slow_bw`` — the 100G/400G mixed-uplink
+    fabrics that mid-upgrade clusters actually run.  Hosts stay at
+    ``slow_bw`` unless overridden, so the fabric asymmetry (not the edge)
+    is the bottleneck the balancer must exploit.
+
+    Hash-based schemes (ECMP, per-flowcell spraying) split uniformly over
+    the planes and leave the fast spines underfed; capacity-weighted
+    flowlet rerouting (``flowlet_timeout``, WCMP weights from these link
+    speeds) and SeqBalance's congestion feedback both see the extra
+    headroom.  The inter-path delivery-time skew that the flowcell
+    reordering-cost model (``dataplane.reorder_gbn_factor``) charges for is
+    also largest here: a cell on a 100G plane trails its 400G sibling 4x.
+    """
+    assert 0 <= n_fast_spines <= n_spine, (n_fast_spines, n_spine)
+    L, S = n_leaf, n_spine
+    overrides: dict[int, float] = {}
+    for s in range(S - n_fast_spines, S):
+        for leaf in range(L):
+            overrides[leaf * S + s] = fast_bw  # up[l, s]
+            overrides[L * S + s * L + leaf] = fast_bw  # down[s, l]
+    return leaf_spine(L, S, hosts_per_leaf, slow_bw, host_bw=host_bw,
+                      base_rtt_s=base_rtt_s, capacity_overrides=overrides)

@@ -95,6 +95,15 @@ class Trace:
     dst: np.ndarray  # i32[F]
     flow_id: np.ndarray  # u32[F]
     valid: np.ndarray  # bool[F] (padding mask)
+    # paths the flow's parent chunk straddles (flowcell splitting): 1 means
+    # the flow is alone on its path — no reordering possible, and the
+    # dataplane's reorder_gbn_factor is exactly 1 there.  Defaults to all
+    # ones so every pre-flowcell constructor keeps its meaning.
+    spray: np.ndarray | None = None  # i32[F]
+
+    def __post_init__(self):
+        if self.spray is None:
+            self.spray = np.ones(np.shape(self.src)[0], np.int32)
 
 
 def poisson_trace(cfg: TraceConfig) -> Trace:
@@ -272,6 +281,18 @@ def collective_trace(
     n_rounds = 2 * (n - 1) if rounds is None else int(rounds)
 
     base = (seed * 0x9E3779B9) & 0xFFFFFFFF
+    fcells = int(getattr(plan, "flowcells", 1))
+    if fcells > 1:
+        # token-based flowcell splitting (RDMACell): each (chunk, member)
+        # segment is cut into `fcells` cells on DISTINCT QPs, each steered
+        # to its own path from plan.flowcell_paths()'s round-robin — the
+        # rendered trace carries spray = straddled-path count so the
+        # dataplane can charge the reordering cost.  Kept as a separate
+        # branch so the fcells == 1 path below stays byte-identical to the
+        # pre-flowcell construction (pinned by the sha-golden twins).
+        return _flowcell_trace(
+            plan, hosts, n, n_chunks, dirs, seg_bytes, round_gap_s, n_rounds,
+            start_s, base, fcells, steer_paths, steer_targets)
     # one QP per (chunk, member), persistent across rounds
     qp_fid = np.array(
         [[((c * n + i) * 2654435761 + base) & 0xFFFFFFFF for i in range(n)]
@@ -316,6 +337,77 @@ def collective_trace(
     )
 
 
+def _flowcell_trace(plan, hosts, n, n_chunks, dirs, seg_bytes, round_gap_s,
+                    n_rounds, start_s, base, fcells, steer_paths,
+                    steer_targets) -> Trace:
+    """Flowcell rendering of a collective: one QP per (chunk, member, cell),
+    cell sizes ``seg_bytes / fcells`` (bytes per chunk conserved), cell j
+    steered to the j-th active path after the chunk's own (the
+    ``PathPlan.flowcell_paths`` round-robin, diversified per member exactly
+    like the chunk-granularity default).  Every row carries
+    ``spray = min(fcells, n_active)`` — the straddle count the dataplane's
+    ``reorder_gbn_factor`` turns into a go-back-N amplification."""
+    active = [p for p, dead in enumerate(plan.inactive) if not dead]
+    if steer_paths is not None:
+        active = [p for p in active if p < steer_paths]
+    if not active:
+        active = [0]
+    A = len(active)
+    spray_val = min(fcells, A)
+    qp_fid = np.array(
+        [[[((c * n + i) * 2654435761 + base + j * 0x85EBCA77) & 0xFFFFFFFF
+           for j in range(fcells)] for i in range(n)] for c in range(n_chunks)],
+        np.uint32)
+    if steer_paths is not None:
+        q_src = np.array([[[hosts[i]] * fcells for i in range(n)]
+                          for c in range(n_chunks)], np.int64)
+        q_dst = np.array([[[hosts[(i + dirs[c]) % n]] * fcells
+                           for i in range(n)] for c in range(n_chunks)], np.int64)
+        if steer_targets is not None:
+            # in-epoch replanning: cell 0 keeps the EXPLICIT pinned target
+            # (same five-tuple -> same path -> no reorder); later cells walk
+            # the active paths from it.
+            pinned = np.asarray(steer_targets, np.int32).reshape(n_chunks, n)
+            assert int(pinned.max()) < steer_paths, (pinned, steer_paths)
+            q_target = np.empty((n_chunks, n, fcells), np.int32)
+            for c in range(n_chunks):
+                for i in range(n):
+                    p0 = int(pinned[c, i])
+                    b = active.index(p0) if p0 in active else 0
+                    q_target[c, i, 0] = p0
+                    for j in range(1, fcells):
+                        q_target[c, i, j] = active[(b + j) % A]
+        else:
+            q_target = np.array(
+                [[[active[(i * n_chunks + c + j) % A] for j in range(fcells)]
+                  for i in range(n)] for c in range(n_chunks)], np.int32)
+        qp_fid = _ecmp_steered_fids(
+            q_src.reshape(-1), q_dst.reshape(-1), qp_fid.reshape(-1),
+            q_target.reshape(-1), steer_paths).reshape(n_chunks, n, fcells)
+    cell_bytes = seg_bytes / fcells
+    sizes, arrivals, src, dst, flow_id = [], [], [], [], []
+    for r in range(n_rounds):
+        t = start_s + r * round_gap_s
+        for c, d in enumerate(dirs):
+            for i in range(n):
+                for j in range(fcells):
+                    sizes.append(cell_bytes)
+                    arrivals.append(t)
+                    src.append(hosts[i])
+                    dst.append(hosts[(i + d) % n])
+                    flow_id.append(qp_fid[c, i, j])
+    f = len(sizes)
+    return Trace(
+        sizes=np.asarray(sizes, np.float32),
+        arrivals=np.asarray(arrivals, np.float32),
+        src=np.asarray(src, np.int32),
+        dst=np.asarray(dst, np.int32),
+        flow_id=np.asarray(flow_id, np.uint32),
+        valid=np.ones(f, bool),
+        spray=np.full(f, spray_val, np.int32),
+    )
+
+
 def merge_traces(*traces: Trace) -> Trace:
     """Concatenate traces into one (the engine sorts by arrival itself).
 
@@ -334,6 +426,7 @@ def merge_traces(*traces: Trace) -> Trace:
         dst=np.concatenate([t.dst for t in traces]),
         flow_id=np.concatenate([t.flow_id for t in traces]),
         valid=np.concatenate([t.valid for t in traces]),
+        spray=np.concatenate([t.spray for t in traces]),
     )
 
 
